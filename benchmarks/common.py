@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: wall-clock timing with warmup, CSV rows.
+
+Sizes are scaled down from the paper's (single CPU core here vs 24-core
+Xeon there) but keep the paper's *structure*: same graph families, same
+parameter grids, same comparisons. Each bench prints
+``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, reps: int = 3, warmup: int = 1):
+    """Median wall time of fn(*args) in seconds (jax-blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def row(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.0f},{derived}")

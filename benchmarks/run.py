@@ -1,0 +1,36 @@
+"""Benchmark driver: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV. Roofline terms come from the dry-run
+(launch.dryrun → EXPERIMENTS.md), not from here.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_delta_sweep,
+        bench_gamemap,
+        bench_preprocess,
+        bench_rmat,
+        bench_scaling,
+        bench_smallworld,
+    )
+
+    print("name,us_per_call,derived")
+    failed = []
+    for mod in (bench_smallworld, bench_delta_sweep, bench_scaling,
+                bench_preprocess, bench_rmat, bench_gamemap):
+        try:
+            mod.main()
+        except Exception:
+            failed.append(mod.__name__)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

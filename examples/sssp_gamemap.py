@@ -1,0 +1,41 @@
+"""Game-map SSSP (paper §4 'Game Maps'): occupancy grid, straight moves
+cost 10, diagonals 14, Δ=13 — runs both the generic engine and the
+grid-stencil engine (the Pallas kernel's oracle backend on CPU) and
+renders a small ASCII path.
+
+    PYTHONPATH=src python examples/sssp_gamemap.py
+"""
+import numpy as np
+
+from repro.core import DeltaConfig, DeltaSteppingSolver
+from repro.core.grid import GridDeltaConfig, GridDeltaSolver
+from repro.graphs import grid_map
+
+H = W = 40
+g, free = grid_map(H, W, obstacle_frac=0.15, seed=7)
+src = int(np.flatnonzero(free.ravel())[0])
+
+# generic edge-centric engine
+res = DeltaSteppingSolver(g, DeltaConfig(delta=13)).solve(src)
+dist_edge = np.asarray(res.dist).reshape(H, W)
+
+# grid-stencil engine (same bucket semantics, min-plus stencil sweeps)
+grid = GridDeltaSolver(free, GridDeltaConfig(backend="ref"))
+gres = grid.solve((src // W, src % W))
+dist_grid = np.asarray(gres.dist)
+assert np.array_equal(dist_edge, dist_grid), "engines disagree!"
+print(f"engines agree; {int(gres.outer_iters)} buckets, "
+      f"{int(gres.inner_iters)} light sweeps")
+
+# ASCII render: walls '#', unreachable '.', else distance band
+INF = 2**31 - 1
+band = np.where(dist_grid < INF, dist_grid // 80, -1)
+chars = np.full((H, W), "#", dtype="<U1")
+for r in range(H):
+    for c in range(W):
+        if free[r, c]:
+            b = band[r, c]
+            chars[r, c] = "." if b < 0 else "0123456789abcdefghijklmnop"[
+                min(int(b), 25)]
+chars[src // W, src % W] = "S"
+print("\n".join("".join(row) for row in chars[:20]))

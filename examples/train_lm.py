@@ -1,0 +1,50 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the full production substrate — checkpointing (restart-safe), straggler
+watchdog, AdamW + warmup-cosine, synthetic Zipfian data — then serve a
+few generations from the trained weights.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.configs.base import LMConfig
+from repro.data import SyntheticTokens
+from repro.models.transformer import init_lm, lm_loss
+from repro.optim import adamw, warmup_cosine
+from repro.serve import generate
+from repro.train import Trainer, TrainerConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--d-model", type=int, default=512)
+ap.add_argument("--layers", type=int, default=8)
+args = ap.parse_args()
+
+# ~100M params: 8L x 512d + 32k vocab
+cfg = LMConfig(name="lm100m", n_layers=args.layers, d_model=args.d_model,
+               n_heads=8, n_kv_heads=4, d_ff=2048, vocab=32_000,
+               attention_chunk=128)
+params = init_lm(cfg, jax.random.key(0))
+n_params = sum(p.size for p in jax.tree.leaves(params))
+print(f"model: {n_params / 1e6:.1f}M params")
+
+data = SyntheticTokens(vocab=cfg.vocab, batch=8, seq_len=128)
+loss_fn = lambda p, b: lm_loss(p, cfg, b["tokens"], b["labels"],
+                               loss_chunk=128)
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    trainer = Trainer(
+        loss_fn, adamw(warmup_cosine(3e-4, 20, args.steps)), params, data,
+        TrainerConfig(total_steps=args.steps, ckpt_dir=ckpt_dir,
+                      ckpt_interval=100, log_interval=25))
+    params = trainer.run()
+    first, last = trainer.history[0][1], trainer.history[-1][1]
+    print(f"loss: {first:.3f} -> {last:.3f}")
+    assert last < first, "loss did not improve"
+
+prompts = jax.random.randint(jax.random.key(7), (2, 8), 0, cfg.vocab)
+out = generate(params, cfg, prompts, n_new=16, max_len=64)
+print("generated token ids:", out.tolist())

@@ -1,0 +1,12 @@
+from repro.analysis.hlo import collective_stats, count_op
+from repro.analysis.roofline import (
+    V5E,
+    RooflineReport,
+    analyze,
+    estimate_model_flops,
+    load_reports,
+    save_reports,
+)
+
+__all__ = ["collective_stats", "count_op", "analyze", "RooflineReport",
+           "V5E", "estimate_model_flops", "save_reports", "load_reports"]

@@ -1,0 +1,89 @@
+"""Optimized-HLO text parsing: collective traffic extraction.
+
+``compiled.as_text()`` of an SPMD-partitioned module is per-partition:
+every shape is the per-device shard, so operand sizes here are
+**bytes per device per step**. ``cost_analysis`` is likewise
+per-partition; roofline.py documents the chips multiplication.
+
+Wire-traffic model per collective (ring algorithms, (P−1)/P ≈ 1):
+  all-reduce         2 × operand bytes   (reduce-scatter + all-gather)
+  reduce-scatter     1 × operand bytes
+  all-gather         1 × result bytes    (operand is the local shard)
+  all-to-all         1 × operand bytes
+  collective-permute 1 × operand bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_OP_RE = re.compile(
+    r"=\s*(?P<result>.*?)\s*"
+    r"(?P<op>" + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict:
+    """Returns per-collective-type {count, operand_bytes, wire_bytes} and
+    totals, all per-device per-step."""
+    stats = defaultdict(lambda: {"count": 0, "operand_bytes": 0,
+                                 "wire_bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if "-done(" in line:      # async pair: count the -start only
+            continue
+        args = line[m.end():].split("),")[0]
+        operand_bytes = _shape_bytes(args)
+        result_bytes = _shape_bytes(m.group("result"))
+        if operand_bytes == 0:
+            # optimized HLO often omits operand type annotations —
+            # fall back to the result shape (exact for all-reduce /
+            # all-to-all / permute; undercounts reduce-scatter by ~P)
+            operand_bytes = result_bytes
+        basis = result_bytes if op == "all-gather" else operand_bytes
+        stats[op]["count"] += 1
+        stats[op]["operand_bytes"] += operand_bytes
+        stats[op]["wire_bytes"] += int(basis * _WIRE_FACTOR[op])
+    total = {
+        "count": sum(s["count"] for s in stats.values()),
+        "operand_bytes": sum(s["operand_bytes"] for s in stats.values()),
+        "wire_bytes": sum(s["wire_bytes"] for s in stats.values()),
+    }
+    return {"by_op": dict(stats), "total": total}
+
+
+def count_op(hlo_text: str, opname: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opname)}\(", hlo_text))

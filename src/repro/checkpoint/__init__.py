@@ -1,0 +1,9 @@
+from repro.checkpoint.checkpointer import (
+    AsyncWriter,
+    all_steps,
+    latest_step,
+    restore,
+    save,
+)
+
+__all__ = ["save", "restore", "latest_step", "all_steps", "AsyncWriter"]

@@ -1,0 +1,21 @@
+from repro.configs.base import (
+    DLRMConfig,
+    GNNConfig,
+    LMConfig,
+    MoEConfig,
+    ShapeSpec,
+    SSSPConfig,
+)
+from repro.configs.registry import (
+    ARCH_IDS,
+    all_cells,
+    assigned_cells,
+    family_of,
+    get_config,
+    get_shape,
+    shapes_for,
+)
+
+__all__ = ["LMConfig", "MoEConfig", "GNNConfig", "DLRMConfig", "SSSPConfig",
+           "ShapeSpec", "ARCH_IDS", "family_of", "get_config", "get_shape",
+           "shapes_for", "assigned_cells", "all_cells"]

@@ -1,0 +1,8 @@
+"""Arch config: schnet (family: gnn). Exact spec in gnn_archs.py."""
+from repro.configs.gnn_archs import SCHNET as CONFIG, smoke as _smoke
+
+FAMILY = "gnn"
+
+
+def smoke():
+    return _smoke(CONFIG)

@@ -1,0 +1,22 @@
+"""Core: the paper's contribution — parallel Δ-stepping SSSP in JAX."""
+from repro.core.delta_stepping import (
+    DeltaConfig,
+    DeltaSteppingSolver,
+    SSSPResult,
+    delta_stepping,
+    edge_sweep,
+    pred_argmin,
+)
+from repro.core.ref import bellman_ford, dijkstra, validate_pred_tree
+
+__all__ = [
+    "DeltaConfig",
+    "DeltaSteppingSolver",
+    "SSSPResult",
+    "delta_stepping",
+    "edge_sweep",
+    "pred_argmin",
+    "dijkstra",
+    "bellman_ford",
+    "validate_pred_tree",
+]

@@ -1,0 +1,39 @@
+"""(distance, predecessor) word packing — paper §3 'Data packing'.
+
+The paper packs a 32-bit cost into the high half and a 32-bit vertex id
+into the low half of one 64-bit word so a single x86 CAS updates both
+consistently. Here the same layout makes a single XLA **scatter-min**
+update both consistently: for non-negative costs, integer order on the
+packed int64 equals lexicographic order on (cost, pred), so the min
+combiner picks the smallest cost and, on ties, the smallest predecessor
+id — which also makes the parallel run bitwise deterministic (stronger
+than the paper's CAS, which is timing-dependent on ties).
+
+Requires x64 (``jax.experimental.enable_x64`` in tests); the engine's
+default ``pred_mode='argmin'`` avoids 64-bit traffic entirely (DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.graphs.structures import INF32
+
+MASK32 = (1 << 32) - 1
+# "infinity" word: INF32 cost, all-ones pred (decodes to pred sentinel).
+INF_PACKED = (int(INF32) << 32) | MASK32
+
+
+def pack(dist, pred):
+    """dist int32 (>=0), pred int32 (>=0) → packed int64."""
+    d = dist.astype(jnp.int64)
+    p = pred.astype(jnp.int64) & MASK32
+    return (d << 32) | p
+
+
+def unpack_dist(packed):
+    return (packed >> 32).astype(jnp.int32)
+
+
+def unpack_pred(packed):
+    p = (packed & MASK32).astype(jnp.uint32).astype(jnp.int32)
+    return p

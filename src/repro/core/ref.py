@@ -1,0 +1,99 @@
+"""Reference SSSP oracles (host-side, numpy/heapq).
+
+``dijkstra`` mirrors the Boost Graph Library baseline the paper compares
+against (binary-heap Dijkstra, O(|V| log |V| + |E|)); ``bellman_ford`` is
+a second independent oracle used by the property-based tests so that a
+bug in one reference cannot mask an engine bug.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Tuple
+
+import numpy as np
+
+from repro.graphs.structures import COOGraph, INF32
+
+__all__ = ["dijkstra", "bellman_ford", "validate_pred_tree"]
+
+
+def _to_adj(g: COOGraph):
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    order = np.argsort(src, kind="stable")
+    src, dst, w = src[order], dst[order], w[order]
+    row_ptr = np.zeros(g.n_nodes + 1, dtype=np.int64)
+    np.cumsum(np.bincount(src, minlength=g.n_nodes), out=row_ptr[1:])
+    return row_ptr, dst, w
+
+
+def dijkstra(g: COOGraph, source: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Binary-heap Dijkstra. Returns (dist int64[n] with INF32 sentinel,
+    pred int32[n] with -1 for unreachable/source)."""
+    row_ptr, dst, w = _to_adj(g)
+    n = g.n_nodes
+    dist = np.full(n, int(INF32), dtype=np.int64)
+    pred = np.full(n, -1, dtype=np.int32)
+    dist[source] = 0
+    heap = [(0, source)]
+    done = np.zeros(n, dtype=bool)
+    while heap:
+        d, u = heapq.heappop(heap)
+        if done[u]:
+            continue
+        done[u] = True
+        for e in range(row_ptr[u], row_ptr[u + 1]):
+            v = dst[e]
+            nd = d + int(w[e])
+            if nd < dist[v]:
+                dist[v] = nd
+                pred[v] = u
+                heapq.heappush(heap, (nd, v))
+    return dist, pred
+
+
+def bellman_ford(g: COOGraph, source: int) -> np.ndarray:
+    """Vectorized Bellman-Ford over the edge list. O(V·E) worst case but
+    each round is a single numpy sweep; fine at test sizes."""
+    src = np.asarray(g.src).astype(np.int64)
+    dst = np.asarray(g.dst).astype(np.int64)
+    w = np.asarray(g.w).astype(np.int64)
+    n = g.n_nodes
+    dist = np.full(n, int(INF32), dtype=np.int64)
+    dist[source] = 0
+    for _ in range(n):
+        cand = dist[src] + w
+        nxt = dist.copy()
+        np.minimum.at(nxt, dst, cand)
+        if np.array_equal(nxt, dist):
+            break
+        dist = nxt
+    return dist
+
+
+def validate_pred_tree(g: COOGraph, source: int, dist: np.ndarray,
+                       pred: np.ndarray) -> bool:
+    """Check that ``pred`` encodes a valid shortest-path tree for ``dist``:
+    every reachable non-source v has an edge (pred[v], v) with
+    dist[pred[v]] + w == dist[v]. (Multiple valid trees exist; we check
+    validity, not equality with the oracle's tree.)"""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w).astype(np.int64)
+    edge_w: dict[tuple[int, int], int] = {}
+    for s, d, ww in zip(src, dst, w):
+        key = (int(s), int(d))
+        edge_w[key] = min(edge_w.get(key, 1 << 62), int(ww))
+    for v in range(g.n_nodes):
+        if v == source or dist[v] >= int(INF32):
+            continue
+        p = int(pred[v])
+        if p < 0:
+            return False
+        key = (p, v)
+        if key not in edge_w:
+            return False
+        if dist[p] + edge_w[key] != dist[v]:
+            return False
+    return True

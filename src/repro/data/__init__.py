@@ -1,0 +1,9 @@
+from repro.data.synthetic import (
+    SyntheticClicks,
+    SyntheticTokens,
+    gnn_full_batch,
+    molecule_batch,
+)
+
+__all__ = ["SyntheticTokens", "SyntheticClicks", "gnn_full_batch",
+           "molecule_batch"]

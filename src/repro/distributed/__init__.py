@@ -1,0 +1,10 @@
+from repro.distributed.compression import (
+    compress_grads,
+    dequantize_int8,
+    quantize_int8,
+    topk_sparsify,
+)
+from repro.distributed.elastic import make_mesh_from, plan_remesh, remesh
+
+__all__ = ["compress_grads", "quantize_int8", "dequantize_int8",
+           "topk_sparsify", "plan_remesh", "remesh", "make_mesh_from"]

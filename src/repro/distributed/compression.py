@@ -1,0 +1,73 @@
+"""Gradient compression for data-parallel reduction at 1000+-node scale.
+
+Two composable schemes with **error feedback** (the residual of the
+compression is carried to the next step, which keeps SGD convergence —
+Karimireddy et al. 2019):
+
+* int8 quantization — per-tensor scale, 4× volume reduction on fp32
+  all-reduce traffic; deterministic.
+* top-k sparsification — keep the k largest-magnitude entries per
+  tensor; with k = 1% this is the classic Deep Gradient Compression
+  setting.
+
+Both are pure functions usable inside jit; the trainer applies them
+before the (implicit or explicit) cross-replica reduction and folds the
+residual into the next step's gradients.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g):
+    """g → (q int8, scale f32)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def topk_sparsify(g, frac: float):
+    """Keep the top-|frac| fraction of entries (by magnitude); returns the
+    sparsified dense tensor and the residual (error feedback)."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = (jnp.abs(flat) >= thresh).astype(g.dtype)
+    kept = (flat * mask).reshape(g.shape)
+    return kept, g - kept
+
+
+def compress_grads(grads, residuals, *, scheme: str = "int8",
+                   topk_frac: float = 0.01) -> Tuple:
+    """Apply error-feedback compression to a gradient pytree.
+
+    Returns (compressed_grads, new_residuals). ``residuals`` may be None
+    on the first step."""
+    if residuals is None:
+        residuals = jax.tree.map(jnp.zeros_like, grads)
+    fed = jax.tree.map(lambda g, r: g + r, grads, residuals)
+    if scheme == "int8":
+        def comp(g):
+            q, s = quantize_int8(g)
+            dq = dequantize_int8(q, s)
+            return dq, g - dq
+    elif scheme == "topk":
+        def comp(g):
+            return topk_sparsify(g, topk_frac)
+    elif scheme == "none":
+        def comp(g):
+            return g, jnp.zeros_like(g)
+    else:
+        raise ValueError(scheme)
+    pairs = jax.tree.map(comp, fed)
+    is_pair = lambda t: isinstance(t, tuple)
+    comp_g = jax.tree.map(lambda t: t[0], pairs, is_leaf=is_pair)
+    new_res = jax.tree.map(lambda t: t[1], pairs, is_leaf=is_pair)
+    return comp_g, new_res

@@ -1,0 +1,42 @@
+"""Elastic scaling: re-mesh a live training state when the device pool
+changes (node failure shrinks it, recovery grows it).
+
+The state pytree is resharded by ``device_put`` onto the new mesh with
+the same logical PartitionSpecs — legal whenever the new axis sizes
+still divide (or pad) the sharded dimensions. On a real cluster this is
+driven by the coordinator's failure detector; here ``plan_remesh``
+computes the new mesh shape and ``remesh`` executes the transfer, and
+the trainer wires it to its failure-injection hook so the path is
+exercised in tests.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def plan_remesh(n_devices: int, model_parallel: int) -> Tuple[int, int]:
+    """Largest (data, model) grid that fits the surviving device count,
+    preserving the model-parallel degree (weights must keep fitting)."""
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep model_parallel={model_parallel} with only "
+            f"{n_devices} devices")
+    return (n_devices // model_parallel, model_parallel)
+
+
+def make_mesh_from(devices, shape, names=("data", "model")) -> Mesh:
+    import numpy as np
+    n = shape[0] * shape[1]
+    return Mesh(np.asarray(devices[:n]).reshape(shape), names)
+
+
+def remesh(tree, spec_tree, new_mesh: Mesh):
+    """device_put every leaf onto ``new_mesh`` with its PartitionSpec."""
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(new_mesh, spec))
+    if isinstance(spec_tree, PartitionSpec):
+        return jax.tree.map(lambda x: put(x, spec_tree), tree)
+    return jax.tree.map(put, tree, spec_tree)

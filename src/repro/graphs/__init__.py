@@ -1,0 +1,42 @@
+"""Graph substrate: structures, generators, partitioning, sampling.
+
+Everything the Δ-stepping engine and the GNN/recsys models share lives
+here: COO/CSR/ELL containers, light/heavy edge splitting, synthetic graph
+generators matching the paper's experimental families, a vertex
+partitioner for SPMD sharding and a uniform neighbor sampler for
+minibatch GNN training.
+"""
+from repro.graphs.structures import (
+    COOGraph,
+    CSRGraph,
+    ELLGraph,
+    coo_to_csr,
+    csr_to_ell,
+    light_heavy_split,
+)
+from repro.graphs.generators import (
+    grid_map,
+    random_graph,
+    rmat,
+    square_lattice,
+    watts_strogatz,
+)
+from repro.graphs.partition import VertexPartition, partition_edges
+from repro.graphs.sampler import sample_khop
+
+__all__ = [
+    "COOGraph",
+    "CSRGraph",
+    "ELLGraph",
+    "coo_to_csr",
+    "csr_to_ell",
+    "light_heavy_split",
+    "watts_strogatz",
+    "rmat",
+    "grid_map",
+    "square_lattice",
+    "random_graph",
+    "VertexPartition",
+    "partition_edges",
+    "sample_khop",
+]

@@ -1,0 +1,176 @@
+"""Synthetic graph generators matching the paper's experiment families.
+
+All generators are host-side numpy (deterministic under a seed) and return
+``COOGraph``. Weight conventions follow the paper (§4 Experimental setup):
+
+* small-world / scale-free: integer weights from U(1, 20);
+* game maps: 10 for straight moves, 14 for diagonal moves;
+* lattices: unit or U(1, 20) weights (used for the large-diameter
+  discussion in the paper's conclusion).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.structures import COOGraph
+
+__all__ = [
+    "watts_strogatz",
+    "rmat",
+    "grid_map",
+    "square_lattice",
+    "random_graph",
+]
+
+
+def _finish(src, dst, w, n) -> COOGraph:
+    return COOGraph(
+        src=jnp.asarray(src.astype(np.int32)),
+        dst=jnp.asarray(dst.astype(np.int32)),
+        w=jnp.asarray(w.astype(np.int32)),
+        n_nodes=int(n),
+    )
+
+
+def _uniform_weights(rng: np.random.Generator, m: int,
+                     lo: int = 1, hi: int = 20) -> np.ndarray:
+    return rng.integers(lo, hi + 1, size=m, dtype=np.int32)
+
+
+def watts_strogatz(n: int, k: int, p: float, seed: int = 0,
+                   w_lo: int = 1, w_hi: int = 20) -> COOGraph:
+    """Watts–Strogatz small-world graph (paper §4 'Small-world graphs').
+
+    Ring lattice with ``k`` nearest neighbours (k/2 each side), then each
+    lattice edge has one endpoint rewired to a random node with
+    probability ``p``. Undirected: both directions are emitted with the
+    same weight. Vectorized rewiring with rejection of self loops; rare
+    duplicate edges are kept (harmless for SSSP — scatter-min dedups).
+    """
+    if k % 2 != 0:
+        raise ValueError("k must be even for a ring lattice")
+    rng = np.random.default_rng(seed)
+    half = k // 2
+    u = np.repeat(np.arange(n, dtype=np.int64), half)
+    offs = np.tile(np.arange(1, half + 1, dtype=np.int64), n)
+    v = (u + offs) % n
+    # Rewire the far endpoint with probability p.
+    rew = rng.random(u.shape[0]) < p
+    rand_v = rng.integers(0, n, size=u.shape[0], dtype=np.int64)
+    v = np.where(rew, rand_v, v)
+    keep = u != v  # drop self loops created by rewiring
+    u, v = u[keep], v[keep]
+    w = _uniform_weights(rng, u.shape[0], w_lo, w_hi)
+    src = np.concatenate([u, v])
+    dst = np.concatenate([v, u])
+    ww = np.concatenate([w, w])
+    return _finish(src, dst, ww, n)
+
+
+def rmat(n: int, m: int, a: float = 0.5, b: float = 0.25, c: float = 0.1,
+         d: float = 0.15, seed: int = 0, w_lo: int = 1,
+         w_hi: int = 20) -> COOGraph:
+    """R-MAT scale-free generator (paper §4, probabilities a=.5 b=.25 c=.1
+    d=.15 citing Chakrabarti et al.). ``n`` is rounded up to a power of
+    two internally for quadrant recursion; vertices >= n are folded back
+    with a modulo, preserving the skewed degree distribution. Directed,
+    duplicates kept (the paper's Boost generator does the same).
+    """
+    rng = np.random.default_rng(seed)
+    scale = int(np.ceil(np.log2(max(n, 2))))
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    ab = a + b
+    abc = a + b + c
+    for _ in range(scale):
+        r = rng.random(m)
+        src <<= 1
+        dst <<= 1
+        # quadrant: a → (0,0), b → (0,1), c → (1,0), d → (1,1)
+        right = (r >= a) & (r < ab) | (r >= abc)
+        down = r >= ab
+        dst += right.astype(np.int64)
+        src += down.astype(np.int64)
+    src %= n
+    dst %= n
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    w = _uniform_weights(rng, src.shape[0], w_lo, w_hi)
+    return _finish(src, dst, w, n)
+
+
+def grid_map(height: int, width: int, obstacle_frac: float = 0.1,
+             seed: int = 0, straight_cost: int = 10,
+             diag_cost: int = 14) -> Tuple[COOGraph, np.ndarray]:
+    """Game-map occupancy grid (paper §4 'Game Maps').
+
+    Returns ``(graph, free_mask)`` where ``free_mask`` is the (H, W) bool
+    occupancy grid (True = accessible). Node id = r * width + c. Edges
+    connect 8-neighbouring free cells: cost 10 straight, 14 diagonal —
+    the paper's convention with Δ = 13 making straight moves light and
+    diagonal moves heavy.
+    """
+    rng = np.random.default_rng(seed)
+    free = rng.random((height, width)) >= obstacle_frac
+    idx = np.arange(height * width, dtype=np.int64).reshape(height, width)
+    srcs, dsts, ws = [], [], []
+    moves = [(-1, 0, straight_cost), (1, 0, straight_cost),
+             (0, -1, straight_cost), (0, 1, straight_cost),
+             (-1, -1, diag_cost), (-1, 1, diag_cost),
+             (1, -1, diag_cost), (1, 1, diag_cost)]
+    for dr, dc, cost in moves:
+        rs = slice(max(0, -dr), height - max(0, dr))
+        cs = slice(max(0, -dc), width - max(0, dc))
+        rs2 = slice(max(0, dr), height + min(0, dr))
+        cs2 = slice(max(0, dc), width + min(0, dc))
+        ok = free[rs, cs] & free[rs2, cs2]
+        srcs.append(idx[rs, cs][ok])
+        dsts.append(idx[rs2, cs2][ok])
+        ws.append(np.full(int(ok.sum()), cost, dtype=np.int32))
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    w = np.concatenate(ws)
+    return _finish(src, dst, w, height * width), free
+
+
+def square_lattice(side: int, seed: int = 0, weighted: bool = False) -> COOGraph:
+    """2-D square lattice (4-neighbour), the large-diameter worst case the
+    paper's conclusion analyses (Θ(|V|^{1/d}) iterations)."""
+    rng = np.random.default_rng(seed)
+    idx = np.arange(side * side, dtype=np.int64).reshape(side, side)
+    srcs, dsts = [], []
+    for dr, dc in [(0, 1), (1, 0)]:
+        rs = slice(0, side - dr)
+        cs = slice(0, side - dc)
+        rs2 = slice(dr, side)
+        cs2 = slice(dc, side)
+        srcs.append(idx[rs, cs].ravel())
+        dsts.append(idx[rs2, cs2].ravel())
+    u = np.concatenate(srcs)
+    v = np.concatenate(dsts)
+    if weighted:
+        w = _uniform_weights(rng, u.shape[0])
+    else:
+        w = np.ones(u.shape[0], dtype=np.int32)
+    src = np.concatenate([u, v])
+    dst = np.concatenate([v, u])
+    ww = np.concatenate([w, w])
+    return _finish(src, dst, ww, side * side)
+
+
+def random_graph(n: int, m: int, seed: int = 0, w_lo: int = 1,
+                 w_hi: int = 20, undirected: bool = False) -> COOGraph:
+    """Erdős–Rényi-style G(n, m) used by the property-based test suite."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, size=m, dtype=np.int64)
+    dst = rng.integers(0, n, size=m, dtype=np.int64)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    w = _uniform_weights(rng, src.shape[0], w_lo, w_hi)
+    if undirected:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        w = np.concatenate([w, w])
+    return _finish(src, dst, w, n)

@@ -1,0 +1,79 @@
+"""Vertex partitioning for SPMD Δ-stepping (DESIGN.md §4).
+
+The paper distributes bucket entries over OpenMP threads with static
+scheduling; we map that to a static 1-D partition of the vertex set over
+the ``model`` mesh axis. Each shard owns a contiguous vertex range plus
+every outgoing edge of its range (CSR row ownership). Shards are padded
+to a common edge count so the result stacks into dense arrays that
+``shard_map`` can consume — padding edges use the sentinel source
+``n_nodes`` which is never in any frontier.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.structures import COOGraph, INF32
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class VertexPartition:
+    """Stacked per-shard edge arrays.
+
+    ``src``/``dst``/``w``: int32[n_shards, max_edges_per_shard]. Padding
+    slots have src == n_nodes (sentinel) and w == INF32. ``vstart``:
+    int32[n_shards] first owned vertex of each shard.
+    """
+
+    src: jax.Array
+    dst: jax.Array
+    w: jax.Array
+    vstart: jax.Array
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    n_shards: int = dataclasses.field(metadata=dict(static=True))
+    shard_nodes: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def edges_per_shard(self) -> int:
+        return int(self.src.shape[1])
+
+
+def partition_edges(g: COOGraph, n_shards: int) -> VertexPartition:
+    """Static 1-D partition: shard i owns vertices [i*S, (i+1)*S) and all
+    their outgoing edges. Host-side numpy."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    n = g.n_nodes
+    shard_nodes = -(-n // n_shards)  # ceil
+    owner = np.minimum(src // shard_nodes, n_shards - 1).astype(np.int64)
+    order = np.argsort(owner, kind="stable")
+    src, dst, w, owner = src[order], dst[order], w[order], owner[order]
+    counts = np.bincount(owner, minlength=n_shards)
+    cap = int(counts.max()) if counts.size else 1
+    # Round up so every shard's edge block tiles cleanly into lanes.
+    cap = max(1, -(-cap // 128) * 128)
+    ps = np.full((n_shards, cap), n, dtype=np.int32)
+    pd = np.zeros((n_shards, cap), dtype=np.int32)
+    pw = np.full((n_shards, cap), INF32, dtype=np.int32)
+    starts = np.zeros(n_shards + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for i in range(n_shards):
+        lo, hi = starts[i], starts[i + 1]
+        ps[i, : hi - lo] = src[lo:hi]
+        pd[i, : hi - lo] = dst[lo:hi]
+        pw[i, : hi - lo] = w[lo:hi]
+    vstart = (np.arange(n_shards) * shard_nodes).astype(np.int32)
+    return VertexPartition(
+        src=jnp.asarray(ps),
+        dst=jnp.asarray(pd),
+        w=jnp.asarray(pw),
+        vstart=jnp.asarray(vstart),
+        n_nodes=n,
+        n_shards=n_shards,
+        shard_nodes=int(shard_nodes),
+    )

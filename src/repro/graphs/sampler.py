@@ -1,0 +1,63 @@
+"""Uniform k-hop neighbor sampler (GraphSAGE-style) for minibatch GNN
+training — required by the ``minibatch_lg`` shape (fanout 15-10).
+
+Pure-JAX, jit-able: per hop, for each frontier node draw ``fanout``
+neighbor slots uniformly *with replacement* from its CSR adjacency row
+(standard GraphSAGE practice; nodes with degree 0 self-loop). Returns the
+block structure the GNN layers consume: per-hop (src, dst) edge lists in
+*local* index space plus the gathered node id table.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SampledBlock(NamedTuple):
+    """One hop of sampled message flow: edges src_local -> dst_local.
+
+    ``src_local`` indexes into the *next* hop's node table (size
+    n_dst * fanout + n_dst prefix), ``dst_local`` into the current one.
+    """
+
+    src_nodes: jax.Array   # int32[n_src] global node ids of this hop's inputs
+    src_local: jax.Array   # int32[n_edges]
+    dst_local: jax.Array   # int32[n_edges]
+    n_dst: int
+
+
+def _sample_one_hop(key, row_ptr, col, seeds, fanout: int):
+    """seeds: int32[B] → sampled neighbor ids int32[B, fanout]."""
+    deg = row_ptr[seeds + 1] - row_ptr[seeds]
+    u = jax.random.uniform(key, (seeds.shape[0], fanout))
+    slot = jnp.floor(u * jnp.maximum(deg, 1)[:, None]).astype(jnp.int32)
+    idx = row_ptr[seeds][:, None] + slot
+    nbrs = col[idx]
+    # degree-0 nodes fall back to a self loop
+    return jnp.where(deg[:, None] > 0, nbrs, seeds[:, None])
+
+
+def sample_khop(key, row_ptr, col, seeds, fanouts: Sequence[int]
+                ) -> Tuple[jax.Array, list[SampledBlock]]:
+    """Layer-wise k-hop sampling from the outermost hop inwards.
+
+    Returns ``(input_nodes, blocks)`` where ``blocks[h]`` flows messages
+    from hop h+1's nodes into hop h's nodes and ``blocks[0].n_dst`` equals
+    ``len(seeds)``. All shapes are static given (len(seeds), fanouts).
+    """
+    blocks = []
+    cur = seeds.astype(jnp.int32)
+    for h, fanout in enumerate(fanouts):
+        key, sub = jax.random.split(key)
+        nbrs = _sample_one_hop(sub, row_ptr, col, cur, fanout)  # [B, f]
+        n_dst = cur.shape[0]
+        # next hop's node table = [dst nodes (for self features)] ++ sampled
+        nxt = jnp.concatenate([cur, nbrs.reshape(-1)])
+        src_local = n_dst + jnp.arange(n_dst * fanout, dtype=jnp.int32)
+        dst_local = jnp.repeat(jnp.arange(n_dst, dtype=jnp.int32), fanout)
+        blocks.append(SampledBlock(src_nodes=cur, src_local=src_local,
+                                   dst_local=dst_local, n_dst=n_dst))
+        cur = nxt
+    return cur, blocks

@@ -1,0 +1,4 @@
+from repro.kernels.bucket_scan.ops import bucket_scan
+from repro.kernels.bucket_scan.ref import bucket_scan_ref
+
+__all__ = ["bucket_scan", "bucket_scan_ref"]

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: fused bucket-array scan.
+
+The paper's C1 trade: the dense bucket array must be *scanned in full*
+at every inner iteration to find the members of the current bucket. In
+the JAX engine that scan shows up three times per iteration (frontier
+mask, frontier-any termination flag, next-bucket minimum). This kernel
+fuses all three into one pass over ``tent``/``explored``:
+
+    frontier[v]   = tent[v] < INF  &  tent[v]//Δ == i  &  tent[v] < explored[v]
+    any_frontier  = OR-reduce(frontier)
+    next_bucket   = min over v of tent[v]//Δ restricted to buckets > i
+
+Grid is 1-D over row blocks of the (padded) column-major tent layout;
+the two scalar outputs accumulate across sequential grid steps into a
+(1, 1) block (TPU grid execution is sequential, making the accumulation
+race-free — the same argument the paper makes for benign writes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.graphs.structures import INF32
+
+_INF = int(INF32)  # python int: pallas kernels cannot capture traced constants
+_IMAX = 2**31 - 1
+
+
+def bucket_scan_kernel(i_ref, tent_ref, explored_ref, frontier_ref,
+                       any_ref, next_ref, *, delta: int):
+    pid = pl.program_id(0)
+    i = i_ref[0, 0]
+    t = tent_ref[...]
+    e = explored_ref[...]
+    fin = t < _INF
+    b = jnp.where(fin, t // delta, _IMAX)
+    f = fin & (b == i) & (t < e)
+    frontier_ref[...] = f.astype(jnp.int8)
+
+    @pl.when(pid == 0)
+    def _init():
+        any_ref[0, 0] = 0
+        next_ref[0, 0] = _IMAX
+
+    any_ref[0, 0] = jnp.maximum(any_ref[0, 0], f.any().astype(jnp.int32))
+    nb = jnp.where(b > i, b, _IMAX).min()
+    next_ref[0, 0] = jnp.minimum(next_ref[0, 0], nb)
+
+
+def bucket_scan_pallas(tent2d, explored2d, bucket_i, *, delta: int,
+                       block_rows: int, interpret: bool = False):
+    """tent2d/explored2d: int32[R, 128] padded row-major reshape of tent
+    (padding = INF). Returns (frontier int8[R,128], any int32[1,1],
+    next_bucket int32[1,1])."""
+    r, lanes = tent2d.shape
+    assert r % block_rows == 0
+    n_blocks = r // block_rows
+    i_arr = jnp.full((1, 1), bucket_i, jnp.int32)
+    kernel = functools.partial(bucket_scan_kernel, delta=delta)
+    blk = lambda: pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))
+    scalar = lambda: pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[scalar(), blk(), blk()],
+        out_specs=[blk(), scalar(), scalar()],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, lanes), jnp.int8),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(i_arr, tent2d, explored2d)

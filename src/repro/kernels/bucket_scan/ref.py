@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for bucket_scan."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.graphs.structures import INF32
+
+_INF = jnp.int32(INF32)
+_IMAX = jnp.int32(2**31 - 1)
+
+
+def bucket_scan_ref(tent, explored, bucket_i, *, delta: int):
+    """tent/explored int32[n] → (frontier bool[n], any bool, next int32)."""
+    fin = tent < _INF
+    b = jnp.where(fin, tent // delta, _IMAX)
+    frontier = fin & (b == bucket_i) & (tent < explored)
+    nxt = jnp.where(b > bucket_i, b, _IMAX).min()
+    return frontier, frontier.any(), nxt

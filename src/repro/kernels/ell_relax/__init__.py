@@ -1,0 +1,4 @@
+from repro.kernels.ell_relax.ops import ell_relax
+from repro.kernels.ell_relax.ref import ell_relax_ref
+
+__all__ = ["ell_relax", "ell_relax_ref"]

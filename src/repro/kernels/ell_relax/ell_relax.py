@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: frontier-row expansion for the ELL strategy.
+
+The frontier-centric Δ-stepping sweep gathers the ELL adjacency rows of
+the compacted frontier and produces relaxation candidates
+``tent[v] + w(v, u)`` (paper's request-set computation, with the C4
+deviation of evaluating costs during generation). The gather is
+irregular; on TPU the idiomatic form is **scalar-prefetch indexing**:
+the compacted frontier indices are prefetched to SMEM and drive the
+BlockSpec index maps, so each grid step DMAs exactly the ELL row block
+and tent row it needs from HBM into VMEM — no host-side gather
+materialization.
+
+Grid: one step per block of ``rows_per_block`` frontier entries; padding
+entries point at the all-sentinel row ``n`` and yield INF candidates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.graphs.structures import INF32
+
+_INF = int(INF32)  # python int: pallas kernels cannot capture traced constants
+
+
+def ell_relax_kernel(fidx_ref, dist_ref, w_ref, out_ref):
+    """dist_ref: (R, 1) tent distances of this block's frontier rows;
+    w_ref: (R, D) edge weights (INF = padding slot); out: candidates."""
+    d = dist_ref[...]                       # (R, 1)
+    w = w_ref[...]                          # (R, D)
+    valid = (w < _INF) & (d < _INF)
+    cand = jnp.where(valid, d, 0) + jnp.where(valid, w, 0)
+    out_ref[...] = jnp.where(valid, cand, _INF)
+
+
+def ell_relax_pallas(fidx, dist_col, w_ell, *, rows_per_block: int,
+                     interpret: bool = False):
+    """fidx: int32[cap] compacted frontier (sentinel n for padding);
+    dist_col: int32[n+1, 1] tent distances (row n = INF sentinel);
+    w_ell: int32[n+1, D] ELL weights. Returns candidates int32[cap, D].
+
+    cap % rows_per_block == 0 is required (ops.py pads).
+    """
+    cap = fidx.shape[0]
+    d = w_ell.shape[1]
+    assert cap % rows_per_block == 0
+    n_blocks = cap // rows_per_block
+
+    def dist_map(i, fidx_ref):
+        del fidx_ref
+        return (i, 0)
+
+    # Scalar-prefetch: block index maps read the frontier indices. With
+    # rows_per_block == 1 each step DMAs exactly row fidx[i]; for larger
+    # blocks we fall back to a gathered layout prepared by ops.py.
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((rows_per_block, 1), dist_map),
+            pl.BlockSpec((rows_per_block, d), dist_map),
+        ],
+        out_specs=pl.BlockSpec((rows_per_block, d), dist_map),
+    )
+    return pl.pallas_call(
+        ell_relax_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((cap, d), jnp.int32),
+        interpret=interpret,
+    )(fidx, dist_col, w_ell)
+
+
+def ell_relax_row_gather_pallas(fidx, dist, w_ell, *, interpret: bool = False):
+    """Fully-fused variant (rows_per_block=1): the scalar-prefetched
+    frontier index drives the DMA of each ELL row directly, so the
+    gather itself happens inside the kernel pipeline."""
+    cap = fidx.shape[0]
+    d = w_ell.shape[1]
+
+    def row_map(i, fidx_ref):
+        return (fidx_ref[i], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(cap,),
+        in_specs=[
+            pl.BlockSpec((1, 1), row_map),
+            pl.BlockSpec((1, d), row_map),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, _: (i, 0)),
+    )
+    return pl.pallas_call(
+        ell_relax_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((cap, d), jnp.int32),
+        interpret=interpret,
+    )(fidx, dist, w_ell)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for ell_relax: candidate generation for a compacted
+frontier over an ELL adjacency block."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.graphs.structures import INF32
+
+_INF = int(INF32)
+
+
+def ell_relax_ref(fidx, dist, w_ell):
+    """fidx int32[cap] (sentinel n = padding), dist int32[n] tent,
+    w_ell int32[n+1, D] (INF = padding slot) → candidates int32[cap, D]."""
+    d_f = jnp.take(dist, fidx, mode="fill", fill_value=_INF)   # [cap]
+    rows_w = w_ell[fidx]                                       # [cap, D]
+    valid = (rows_w < _INF) & (d_f[:, None] < _INF)
+    cand = jnp.where(valid, d_f[:, None], 0) + jnp.where(valid, rows_w, 0)
+    return jnp.where(valid, cand, _INF)

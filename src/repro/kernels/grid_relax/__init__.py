@@ -1,0 +1,4 @@
+from repro.kernels.grid_relax.ops import grid_relax
+from repro.kernels.grid_relax.ref import grid_relax_ref
+
+__all__ = ["grid_relax", "grid_relax_ref"]

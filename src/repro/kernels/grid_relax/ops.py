@@ -1,0 +1,46 @@
+"""Jit-friendly wrapper around the grid_relax Pallas kernel: pads the
+grid to TPU-aligned tiles (rows → block_rows multiple, cols → 128 lanes)
+with INF / blocked cells, dispatches kernel or oracle, and crops."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax.numpy as jnp
+
+from repro.graphs.structures import INF32
+from repro.kernels.grid_relax.grid_relax import grid_relax_pallas
+from repro.kernels.grid_relax.ref import grid_relax_ref
+
+_LANE = 128
+
+
+def _pad_to(x, rows, cols, fill):
+    h, w = x.shape
+    return jnp.pad(x, ((0, rows - h), (0, cols - w)), constant_values=fill)
+
+
+def grid_relax(tent, free, bucket_i, *, delta: int = 13,
+               cost_straight: int = 10, cost_diag: int = 14, light: bool,
+               block_rows: int = 64, backend: str = "pallas",
+               interpret: bool = False):
+    """One Δ-stepping relaxation sweep over a game-map grid.
+
+    tent: int32[H, W] tentative distances (INF32 = unreached/blocked).
+    free: bool[H, W] occupancy mask.
+    bucket_i: traced int32 — current bucket index.
+    backend: 'pallas' | 'ref'.
+    """
+    if backend == "ref":
+        return grid_relax_ref(tent, free, bucket_i, delta=delta,
+                              cost_straight=cost_straight,
+                              cost_diag=cost_diag, light=light)
+    h, w = tent.shape
+    hp = -(-h // block_rows) * block_rows
+    wp = -(-w // _LANE) * _LANE
+    tent_p = _pad_to(tent, hp, wp, INF32)
+    free_p = _pad_to(free.astype(jnp.int8), hp, wp, 0)
+    out = grid_relax_pallas(tent_p, free_p, bucket_i, delta=delta,
+                            cost_straight=cost_straight, cost_diag=cost_diag,
+                            light=light, block_rows=block_rows,
+                            interpret=interpret)
+    return out[:h, :w]

@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for the grid_relax kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.graphs.structures import INF32
+
+_INF = jnp.int32(INF32)
+
+
+def _neighbor(tent, dr, dc):
+    """tent value of the (dr, dc) neighbour, INF past the grid edge."""
+    v = tent
+    if dr == -1:
+        v = jnp.concatenate([jnp.full((1, v.shape[1]), _INF, v.dtype),
+                             v[:-1]], axis=0)
+    elif dr == 1:
+        v = jnp.concatenate([v[1:],
+                             jnp.full((1, v.shape[1]), _INF, v.dtype)], axis=0)
+    if dc == -1:
+        v = jnp.concatenate([jnp.full((v.shape[0], 1), _INF, v.dtype),
+                             v[:, :-1]], axis=1)
+    elif dc == 1:
+        v = jnp.concatenate([v[:, 1:],
+                             jnp.full((v.shape[0], 1), _INF, v.dtype)], axis=1)
+    return v
+
+
+def grid_relax_ref(tent, free, bucket_i, *, delta: int, cost_straight: int,
+                   cost_diag: int, light: bool):
+    """One masked min-plus sweep; free is bool[H, W]."""
+    best = jnp.full_like(tent, _INF)
+    moves = []
+    if (cost_straight <= delta) == light:
+        moves += [(-1, 0, cost_straight), (1, 0, cost_straight),
+                  (0, -1, cost_straight), (0, 1, cost_straight)]
+    if (cost_diag <= delta) == light:
+        moves += [(-1, -1, cost_diag), (-1, 1, cost_diag),
+                  (1, -1, cost_diag), (1, 1, cost_diag)]
+    for dr, dc, cost in moves:
+        v = _neighbor(tent, dr, dc)
+        f = (v < _INF) & (v // delta == bucket_i)
+        cand = jnp.where(f, v, 0) + cost
+        best = jnp.minimum(best, jnp.where(f, cand, _INF))
+    return jnp.where(free, jnp.minimum(tent, best), _INF)

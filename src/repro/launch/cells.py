@@ -1,0 +1,479 @@
+"""(architecture × input-shape × mesh) cell builders for the dry-run.
+
+A *cell* packages everything needed to ``jit(...).lower(*args)`` one
+step program: the step callable, ShapeDtypeStruct stand-ins for every
+input (weak-type-correct, shardable, never allocated), the input/output
+shardings, and the MODEL_FLOPS estimate for §Roofline.
+
+Family → lowered program:
+  lm / train_*        train_step  (loss + grads + optimizer update)
+  lm / prefill_*      prefill     (prompt pass filling the KV cache)
+  lm / decode_*, long serve_step  (one token against the cache)
+  gnn / *             train_step  (full-graph / sampled / batched-mol)
+  recsys / train      train_step; serve_* forward; retrieval top-k
+  sssp / *            batched multi-source Δ-stepping solve
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import family_of, get_config, get_shape
+from repro.configs.base import ShapeSpec
+from repro.analysis.roofline import estimate_model_flops
+from repro.core.distributed import DistDeltaConfig, build_solver_from_meta
+from repro.graphs.sampler import sample_khop
+from repro.models import dlrm as dlrm_lib
+from repro.models import gnn as gnn_lib
+from repro.models import transformer as tf_lib
+from repro.models.param_sharding import (
+    cache_specs,
+    dlrm_param_specs,
+    gnn_param_specs,
+    lm_param_specs,
+    state_specs_like,
+    tree_to_shardings,
+)
+from repro.models.sharding import sharding_rules
+from repro.optim import adafactor, adamw
+from repro.train.steps import make_train_step
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Any                      # jitted (with shardings) step
+    args: tuple                  # ShapeDtypeStructs for .lower(*args)
+    model_flops: float
+    mapping: dict                # logical→mesh mapping used
+    note: str = ""
+
+    def lower(self):
+        return self.fn.lower(*self.args)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(s) for s in shape), dtype)
+
+
+def _fit(sds_tree, shardings_tree):
+    """Drop sharded axes that do not divide the argument dimension (jit
+    in_shardings requires exact divisibility; e.g. 8 KV heads on a
+    16-wide axis, or a batch of 1). Trims axes right-to-left per dim."""
+    def fix(sds, sh):
+        mesh, spec = sh.mesh, sh.spec
+        new = []
+        for dim, entry in zip(sds.shape,
+                              tuple(spec) + (None,) * (len(sds.shape)
+                                                       - len(spec))):
+            if entry is None:
+                new.append(None)
+                continue
+            axes = list(entry) if isinstance(entry, tuple) else [entry]
+            while axes:
+                prod = 1
+                for a in axes:
+                    prod *= mesh.shape[a]
+                if dim % prod == 0:
+                    break
+                axes.pop()
+            new.append(tuple(axes) if len(axes) > 1
+                       else (axes[0] if axes else None))
+        return NamedSharding(mesh, P(*new))
+
+    return jax.tree.map(fix, sds_tree, shardings_tree)
+
+
+def _tree_sds(tree_shape):
+    return jax.tree.map(lambda x: _sds(x.shape, x.dtype), tree_shape)
+
+
+def _dp(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _all_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+def _mapping_for(mesh: Mesh, overrides: Optional[dict] = None):
+    m = {"dp": _dp(mesh), "fsdp": _dp(mesh), "tp": "model", "sp": "model",
+         "ep_cap": _dp(mesh), "nodes": _all_axes(mesh), "act_seq": None}
+    m.update(overrides or {})
+    return m
+
+
+def _opt_for(cfg):
+    # factored state is mandatory above ~100B params (DESIGN.md §6)
+    if cfg.n_params() > 100e9:
+        return adafactor(1e-3)
+    return adamw(3e-4)
+
+
+# ------------------------------------------------------------------ LM cells
+
+def _lm_cell(arch: str, cfg, shape: ShapeSpec, mesh: Mesh,
+             smoke: bool) -> Cell:
+    # training: sequence-parallel residual stream (act_seq -> model axis)
+    mapping = _mapping_for(
+        mesh, {"act_seq": "model"} if shape.kind == "train" else None)
+    b, s = shape.global_batch, shape.seq_len
+    dp_size = 1
+    for a in _dp(mesh):
+        dp_size *= mesh.shape[a]
+    if smoke:
+        b, s = max(2 * dp_size, 4), 64
+
+    params_shape = jax.eval_shape(partial(tf_lib.init_lm, cfg),
+                                  jax.random.key(0))
+    pspecs = lm_param_specs(params_shape)
+    p_sds = _tree_sds(params_shape)
+    p_sh = _fit(p_sds, tree_to_shardings(pspecs, mesh, mapping))
+
+    if shape.kind == "train":
+        opt = _opt_for(cfg)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        s_specs = state_specs_like(pspecs, opt_shape)
+        s_sds = _tree_sds(opt_shape)
+        s_sh = _fit(s_sds, tree_to_shardings(s_specs, mesh, mapping))
+        batch_sh = {
+            "tokens": NamedSharding(mesh, P(_dp(mesh), None)),
+            "labels": NamedSharding(mesh, P(_dp(mesh), None)),
+        }
+        batch_sds = {"tokens": _sds((b, s), I32),
+                     "labels": _sds((b, s), I32)}
+        # No microbatch accumulation: remat + sequence-parallel residuals
+        # already bound activations, and the f32 gradient-accumulator tree
+        # (2x params, double-buffered through the scan carry) is what blew
+        # the 1T config past HBM. Kept available via TrainerConfig.
+        microbatch = None
+        loss_chunk = 64 if smoke else 512
+
+        def loss_fn(p, batch):
+            return tf_lib.lm_loss(p, cfg, batch["tokens"], batch["labels"],
+                                  loss_chunk=loss_chunk)
+
+        raw = make_train_step(loss_fn, opt, microbatch=microbatch,
+                              donate=False, jit=False)
+
+        def step(params, opt_state, batch):
+            with sharding_rules(mesh, mapping):
+                return raw(params, opt_state, None, batch)
+
+        fn = jax.jit(step,
+                     in_shardings=(p_sh, s_sh, batch_sh),
+                     out_shardings=(p_sh, s_sh, None, None),
+                     donate_argnums=(0, 1))
+        args = (p_sds, s_sds, batch_sds)
+    else:
+        import dataclasses as dc
+        cfg = dc.replace(cfg, remat=False)   # remat is a training trade
+        long_ctx = shape.name.startswith("long")
+        if long_ctx:
+            mapping = _mapping_for(mesh, {
+                "dp": None, "sp": _all_axes(mesh)})
+            p_sh = _fit(p_sds, tree_to_shardings(pspecs, mesh, mapping))
+        cache_len = s if smoke is False else 128
+        bb = b if not smoke else max(dp_size, 2)
+        if smoke:
+            cache_len, s = 128, 128
+        c_specs = cache_specs(long_context=long_ctx)
+        cache_shape = jax.eval_shape(
+            partial(tf_lib.init_cache, cfg, bb, cache_len))
+        c_sds = _tree_sds(cache_shape)
+        c_sh = _fit(c_sds, tree_to_shardings(c_specs, mesh, mapping))
+
+        if shape.kind == "prefill":
+            tok_sds = _sds((bb, s if not smoke else 64), I32)
+            tok_sh = NamedSharding(mesh, P(_dp(mesh), None))
+
+            def step(params, tokens, cache):
+                with sharding_rules(mesh, mapping):
+                    return tf_lib.prefill(params, cfg, tokens, cache)
+
+            fn = jax.jit(step, in_shardings=(p_sh, tok_sh, c_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(2,))
+            args = (p_sds, tok_sds, c_sds)
+        else:                                    # decode (incl. long_500k)
+            tok_sds = _sds((bb, 1), I32)
+            tok_spec = P(_dp(mesh), None) if not long_ctx else P(None, None)
+            tok_sh = NamedSharding(mesh, tok_spec)
+
+            def step(params, cache, tokens):
+                with sharding_rules(mesh, mapping):
+                    return tf_lib.decode_step(params, cfg, cache, tokens)
+
+            fn = jax.jit(step, in_shardings=(p_sh, c_sh, tok_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(1,))
+            args = (p_sds, c_sds, tok_sds)
+
+    return Cell(arch, shape.name, fn, args,
+                estimate_model_flops("lm", cfg, shape), mapping)
+
+
+# ----------------------------------------------------------------- GNN cells
+
+def _gnn_batch_sds(cfg, shape: ShapeSpec, smoke: bool, mesh_size: int):
+    n = shape.extra("n_nodes")
+    e = shape.extra("n_edges")
+    b = shape.extra("batch", 1)
+    if smoke:
+        n, e, b = min(n, 256), min(e, 1024), min(b, 4)
+    # pad to mesh-divisible counts so the flat node/edge arrays shard
+    # (padding edges target the sentinel node; compile-only stand-ins)
+    n = -(-n // mesh_size) * mesh_size
+    e = -(-e // mesh_size) * mesh_size
+    return n, e, b
+
+
+def _gnn_cell(arch: str, cfg, shape: ShapeSpec, mesh: Mesh,
+              smoke: bool) -> Cell:
+    from repro.configs.gnn_archs import with_shape_dims
+    cfg = with_shape_dims(cfg, shape.name)
+    if smoke:
+        import dataclasses as dc
+        cfg = dc.replace(cfg, d_in=min(cfg.d_in, 32), n_rbf=16)
+    mapping = _mapping_for(mesh)
+    n, e, b, = _gnn_batch_sds(cfg, shape, smoke, mesh.size)
+    opt = adamw(1e-3)
+    params_shape = jax.eval_shape(partial(gnn_lib.init_gnn, cfg),
+                                  jax.random.key(0))
+    pspecs = gnn_param_specs(params_shape)
+    p_sds = _tree_sds(params_shape)
+    p_sh = _fit(p_sds, tree_to_shardings(pspecs, mesh, mapping))
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    s_sds = _tree_sds(opt_shape)
+    s_sh = _fit(s_sds, tree_to_shardings(
+        state_specs_like(pspecs, opt_shape), mesh, mapping))
+    nodes_spec = NamedSharding(mesh, P(_all_axes(mesh)))
+    nodes2_spec = NamedSharding(mesh, P(_all_axes(mesh), None))
+
+    is_schnet = cfg.arch == "schnet"
+
+    if shape.name == "minibatch_lg":
+        bn = shape.extra("batch_nodes")
+        fanout = shape.extra("fanout")
+        if smoke:
+            bn, fanout = 8, (3, 2)
+
+        def loss_fn(p, batch):
+            key = jax.random.wrap_key_data(batch["seed_key"])
+            nodes, blocks = sample_khop(key, batch["row_ptr"], batch["col"],
+                                        batch["seeds"], fanout)
+            src = jnp.concatenate([bl.src_local + 0 for bl in blocks])
+            dst = jnp.concatenate([bl.dst_local for bl in blocks])
+            if is_schnet:
+                inputs = dict(
+                    atom_z=jnp.take(batch["atom_z"], nodes, mode="clip"),
+                    pos=jnp.take(batch["pos"], nodes, axis=0, mode="clip"),
+                    src=src, dst=dst,
+                    mol_id=jnp.zeros((nodes.shape[0],), I32))
+                labels = jnp.zeros((1,), F32)
+                return gnn_lib.gnn_loss(p, cfg, inputs, labels)
+            x = jnp.take(batch["x"], nodes, axis=0, mode="clip")
+            out_mask = jnp.zeros((nodes.shape[0],), F32).at[:bn].set(1.0)
+            labels = jnp.zeros((nodes.shape[0],), I32).at[:bn].set(
+                jnp.take(batch["labels"], batch["seeds"], mode="clip"))
+            inputs = dict(x=x, src=src, dst=dst)
+            return gnn_lib.gnn_loss(p, cfg, inputs, labels, out_mask)
+
+        batch_sds = {"row_ptr": _sds((n + 1,), I32),
+                     "col": _sds((e,), I32),
+                     "seeds": _sds((bn,), I32),
+                     "labels": _sds((n,), I32),
+                     "seed_key": _sds((2,), jnp.uint32)}
+        batch_sh = {"row_ptr": nodes_spec, "col": nodes_spec,
+                    "seeds": NamedSharding(mesh, P(_dp(mesh))),
+                    "labels": nodes_spec,
+                    "seed_key": NamedSharding(mesh, P(None))}
+        if is_schnet:
+            batch_sds.update(atom_z=_sds((n,), I32), pos=_sds((n, 3), F32))
+            batch_sh.update(atom_z=nodes_spec, pos=nodes2_spec)
+        else:
+            batch_sds.update(x=_sds((n, cfg.d_in), F32))
+            batch_sh.update(x=nodes2_spec)
+    else:
+        n_tot = n * b if shape.name == "molecule" else n
+        e_tot = e * b if shape.name == "molecule" else e
+        n_tot = -(-n_tot // mesh.size) * mesh.size
+        e_tot = -(-e_tot // mesh.size) * mesh.size
+
+        def loss_fn(p, batch):
+            if is_schnet:
+                inputs = dict(atom_z=batch["atom_z"], pos=batch["pos"],
+                              src=batch["src"], dst=batch["dst"],
+                              mol_id=batch["mol_id"])
+                return gnn_lib.gnn_loss(p, cfg, inputs, batch["energy"])
+            inputs = dict(x=batch["x"], src=batch["src"], dst=batch["dst"])
+            return gnn_lib.gnn_loss(p, cfg, inputs, batch["labels"],
+                                    batch["label_mask"])
+
+        edges_spec = nodes_spec
+        batch_sds = {"src": _sds((e_tot,), I32), "dst": _sds((e_tot,), I32)}
+        batch_sh = {"src": edges_spec, "dst": edges_spec}
+        if is_schnet:
+            batch_sds.update(atom_z=_sds((n_tot,), I32),
+                             pos=_sds((n_tot, 3), F32),
+                             mol_id=_sds((n_tot,), I32),
+                             energy=_sds((max(b, 1),), F32))
+            batch_sh.update(atom_z=nodes_spec, pos=nodes2_spec,
+                            mol_id=nodes_spec,
+                            energy=NamedSharding(mesh, P(None)))
+        else:
+            batch_sds.update(x=_sds((n_tot, cfg.d_in), F32),
+                             labels=_sds((n_tot,), I32),
+                             label_mask=_sds((n_tot,), F32))
+            batch_sh.update(x=nodes2_spec, labels=nodes_spec,
+                            label_mask=nodes_spec)
+
+    raw = make_train_step(loss_fn, opt, donate=False, jit=False)
+
+    def step(params, opt_state, batch):
+        with sharding_rules(mesh, mapping):
+            return raw(params, opt_state, None, batch)
+
+    batch_sh = _fit(batch_sds, batch_sh)
+    fn = jax.jit(step, in_shardings=(p_sh, s_sh, batch_sh),
+                 out_shardings=(p_sh, s_sh, None, None),
+                 donate_argnums=(0, 1))
+    return Cell(arch, shape.name, fn, (p_sds, s_sds, batch_sds),
+                estimate_model_flops("gnn", cfg, shape), mapping)
+
+
+# -------------------------------------------------------------- recsys cells
+
+def _dlrm_cell(arch: str, cfg, shape: ShapeSpec, mesh: Mesh,
+               smoke: bool) -> Cell:
+    mapping = _mapping_for(mesh)
+    b = shape.global_batch
+    dp_size = 1
+    for a in _dp(mesh):
+        dp_size *= mesh.shape[a]
+    if smoke:
+        b = max(dp_size, 4)
+    params_shape = jax.eval_shape(partial(dlrm_lib.init_dlrm, cfg),
+                                  jax.random.key(0))
+    pspecs = dlrm_param_specs(params_shape)
+    p_sds = _tree_sds(params_shape)
+    p_sh = _fit(p_sds, tree_to_shardings(pspecs, mesh, mapping))
+    dp_spec = P(_dp(mesh))
+
+    dense_sds = _sds((b, cfg.n_dense), F32)
+    sparse_sds = _sds((b, cfg.n_sparse), I32)
+    dense_sh = NamedSharding(mesh, P(_dp(mesh), None))
+    sparse_sh = NamedSharding(mesh, P(_dp(mesh), None))
+
+    if shape.kind == "train":
+        opt = adamw(1e-3)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        s_sds = _tree_sds(opt_shape)
+        s_sh = _fit(s_sds, tree_to_shardings(
+            state_specs_like(pspecs, opt_shape), mesh, mapping))
+
+        def loss_fn(p, batch):
+            return dlrm_lib.dlrm_loss(p, cfg, batch["dense"],
+                                      batch["sparse"], batch["labels"])
+
+        raw = make_train_step(loss_fn, opt, donate=False, jit=False)
+
+        def step(params, opt_state, batch):
+            with sharding_rules(mesh, mapping):
+                return raw(params, opt_state, None, batch)
+
+        fn = jax.jit(step,
+                     in_shardings=(p_sh, s_sh,
+                                   {"dense": dense_sh, "sparse": sparse_sh,
+                                    "labels": NamedSharding(mesh, dp_spec)}),
+                     out_shardings=(p_sh, s_sh, None, None),
+                     donate_argnums=(0, 1))
+        args = (p_sds, s_sds, {"dense": dense_sds, "sparse": sparse_sds,
+                               "labels": _sds((b,), F32)})
+    elif shape.name == "retrieval_cand":
+        nc = shape.extra("n_candidates")
+        if smoke:
+            nc = 512
+        mapping = _mapping_for(mesh, {"dp": None})
+        p_sh = _fit(p_sds, tree_to_shardings(pspecs, mesh, mapping))
+        cand_sds = _sds((nc, cfg.embed_dim), F32)
+        cand_sh = NamedSharding(mesh, P("model", None))
+
+        def step(params, dense, sparse, cand):
+            with sharding_rules(mesh, mapping):
+                return dlrm_lib.retrieval_score(params, cfg, dense, sparse,
+                                                cand, top_k=100)
+
+        fn = jax.jit(step, in_shardings=(
+            p_sh, NamedSharding(mesh, P(None, None)),
+            NamedSharding(mesh, P(None, None)), cand_sh))
+        args = (p_sds, _sds((b, cfg.n_dense), F32),
+                _sds((b, cfg.n_sparse), I32), cand_sds)
+    else:                                        # serve_p99 / serve_bulk
+        def step(params, dense, sparse):
+            with sharding_rules(mesh, mapping):
+                return dlrm_lib.apply_dlrm(params, cfg, dense, sparse)
+
+        fn = jax.jit(step, in_shardings=(p_sh, dense_sh, sparse_sh))
+        args = (p_sds, dense_sds, sparse_sds)
+
+    return Cell(arch, shape.name, fn, args,
+                estimate_model_flops("recsys", cfg, shape), mapping)
+
+
+# ---------------------------------------------------------------- SSSP cells
+
+def _sssp_cell(arch: str, cfg, shape: ShapeSpec, mesh: Mesh,
+               smoke: bool) -> Cell:
+    n = cfg.n_nodes if not smoke else 2048
+    deg = cfg.avg_degree if not smoke else 6
+    dp_prod = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    # sources shard over the batch axes: round up to a full multiple
+    n_sources = max(cfg.n_sources, dp_prod) if not smoke else dp_prod
+    n_sources = -(-n_sources // dp_prod) * dp_prod
+    p_model = mesh.shape["model"]
+    shard_nodes = -(-n // p_model)
+    edges = n * deg
+    cap = -(-(-(-edges // p_model) // 128) * 128 * 5 // 4)  # 1.25x slack
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dcfg = DistDeltaConfig(delta=cfg.delta, combine=cfg.combine,
+                           local_steps=cfg.local_steps,
+                           batch_axes=batch_axes)
+    solve = build_solver_from_meta(n_nodes=n, shard_nodes=shard_nodes,
+                                   mesh=mesh, cfg=dcfg)
+    args = (
+        _sds((n_sources,), I32),
+        _sds((p_model, cap), I32),   # src
+        _sds((p_model, cap), I32),   # dst
+        _sds((p_model, cap), I32),   # w
+        _sds((p_model,), I32),       # vstart
+    )
+    return Cell(arch, shape.name, solve, args,
+                estimate_model_flops("sssp", cfg, shape),
+                {"batch_axes": batch_axes, "model": "model"},
+                note=f"combine={cfg.combine} n={n} deg={deg}")
+
+
+# ------------------------------------------------------------------ dispatch
+
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               smoke: bool = False) -> Cell:
+    family = family_of(arch)
+    cfg = get_config(arch, smoke=smoke)
+    shape = get_shape(arch, shape_name)
+    if family == "lm":
+        return _lm_cell(arch, cfg, shape, mesh, smoke)
+    if family == "gnn":
+        return _gnn_cell(arch, cfg, shape, mesh, smoke)
+    if family == "recsys":
+        return _dlrm_cell(arch, cfg, shape, mesh, smoke)
+    if family == "sssp":
+        return _sssp_cell(arch, cfg, shape, mesh, smoke)
+    raise ValueError(family)

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Single pod: 16×16 = 256 chips, axes ("data", "model").
+Multi-pod:  2×16×16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis carries only data parallelism (plus FSDP weight sharding),
+so its collectives are the low-frequency gradient/weight reductions
+that tolerate the slower inter-pod links.
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — smoke tests."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def mesh_name(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)

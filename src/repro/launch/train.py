@@ -1,0 +1,94 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-9b --smoke \\
+      --steps 50 --ckpt-dir /tmp/ckpt
+
+Runs the end-to-end trainer (checkpoint/restart, straggler watchdog,
+optional gradient compression) on whatever devices exist. Production
+meshes come from ``--mesh single|multi`` (requires the 512-device
+environment of the dry-run); the default uses the host devices.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=int, default=25)
+    ap.add_argument("--compression", default="none",
+                    choices=["none", "int8", "topk"])
+    ap.add_argument("--microbatch", type=int, default=None)
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs import family_of, get_config
+    from repro.data import SyntheticClicks, SyntheticTokens
+    from repro.optim import adamw, warmup_cosine
+    from repro.train import Trainer, TrainerConfig
+
+    family = family_of(args.arch)
+    cfg = get_config(args.arch, smoke=args.smoke)
+    opt = adamw(warmup_cosine(args.lr, 10, args.steps))
+    key = jax.random.key(0)
+
+    if family == "lm":
+        from repro.models.transformer import init_lm, lm_loss
+        params = init_lm(cfg, key)
+        data = SyntheticTokens(vocab=cfg.vocab, batch=args.batch,
+                               seq_len=args.seq)
+        loss_fn = lambda p, b: lm_loss(p, cfg, b["tokens"], b["labels"],
+                                       loss_chunk=min(args.seq, 512))
+    elif family == "recsys":
+        from repro.models.dlrm import dlrm_loss, init_dlrm
+        params = init_dlrm(cfg, key)
+        data = SyntheticClicks(cfg.vocab_sizes, cfg.n_dense,
+                               batch=args.batch)
+        loss_fn = lambda p, b: dlrm_loss(p, cfg, b["dense"], b["sparse"],
+                                         b["labels"])
+    elif family == "gnn":
+        from repro.data import gnn_full_batch
+        from repro.graphs import random_graph
+        from repro.models.gnn import gnn_loss, init_gnn
+
+        g = random_graph(512, 4096, seed=0)
+        fb = gnn_full_batch(512, cfg.d_in, cfg.n_classes, seed=0)
+
+        class _GraphData:
+            def batch_at(self, step):
+                return dict(fb, src=g.src, dst=g.dst)
+
+        data = _GraphData()
+        params = init_gnn(cfg, key)
+        loss_fn = lambda p, b: gnn_loss(
+            p, cfg, dict(x=b["x"], src=b["src"], dst=b["dst"]),
+            b["labels"], b["label_mask"])
+    else:
+        raise SystemExit(f"use launch.sssp for family {family!r}")
+
+    trainer = Trainer(
+        loss_fn, opt, params, data,
+        TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_interval=args.ckpt_interval,
+                      compression=args.compression,
+                      microbatch=args.microbatch))
+    trainer.run()
+    if trainer.history:
+        first, last = trainer.history[0][1], trainer.history[-1][1]
+        print(f"[train] loss {first:.4f} -> {last:.4f} over "
+              f"{args.steps} steps")
+    if trainer.watchdog.events:
+        print(f"[train] straggler events: {trainer.watchdog.events}")
+
+
+if __name__ == "__main__":
+    main()

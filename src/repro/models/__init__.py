@@ -1,0 +1,7 @@
+"""Model zoo: transformer LM (dense/MoE), GNNs, DLRM — pure-functional
+param-pytree models sharing the gather/segment-reduce substrate."""
+from repro.models import dlrm, embedding, gnn, layers, moe, transformer
+from repro.models.sharding import constrain, sharding_rules
+
+__all__ = ["dlrm", "embedding", "gnn", "layers", "moe", "transformer",
+           "constrain", "sharding_rules"]

@@ -1,0 +1,39 @@
+"""EmbeddingBag built from gather + segment-reduce.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — the lookup is
+``jnp.take`` over the table followed by ``jax.ops.segment_sum`` over bag
+ids (the same gather/segment-reduce primitive family as the GNN
+aggregations and the Δ-stepping scatter-min; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table, indices, segment_ids, num_bags: int,
+                  mode: str = "sum", weights=None):
+    """table: (V, D); indices: int32[N] rows to gather; segment_ids:
+    int32[N] bag of each index (sorted not required); → (num_bags, D)."""
+    rows = jnp.take(table, indices, axis=0, mode="fill", fill_value=0)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    if mode == "sum":
+        return jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+    if mode == "mean":
+        s = jax.ops.segment_sum(rows, segment_ids, num_segments=num_bags)
+        c = jax.ops.segment_sum(jnp.ones_like(segment_ids, jnp.float32),
+                                segment_ids, num_segments=num_bags)
+        return s / jnp.maximum(c, 1.0)[:, None]
+    if mode == "max":
+        return jax.ops.segment_max(rows, segment_ids, num_segments=num_bags)
+    raise ValueError(mode)
+
+
+def multi_hot_lookup(table, hot_indices):
+    """Fixed multi-hot layout: hot_indices int32[B, H] (H hots per sample,
+    -1 = padding) → summed embeddings (B, D). The DLRM fast path (no
+    ragged segment ids needed when every sample has the same hot count)."""
+    mask = (hot_indices >= 0)[..., None]
+    rows = jnp.take(table, jnp.maximum(hot_indices, 0), axis=0)
+    return jnp.where(mask, rows, 0).sum(axis=1)

@@ -1,0 +1,259 @@
+"""GNN zoo: GIN, GatedGCN, GAT, SchNet — all built on the edge-index →
+segment-reduce message-passing primitive (``jax.ops.segment_sum`` /
+``segment_max``), the SpMM/SDDMM regime of the kernel taxonomy. The
+same substrate carries the Δ-stepping scatter-min (DESIGN.md §5):
+message passing over (src, dst, feat) is the GNN face of the paper's
+relaxation sweep over (src, dst, weight).
+
+Graphs arrive as fixed-shape COO edge lists (src, dst int32[E]); padding
+edges use src == dst == n (rows gather zeros via fill, scatters drop).
+All layers are pure functions over parameter pytrees.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import GNNConfig
+from repro.models.layers import _dense_init
+from repro.models.sharding import constrain
+
+
+def _seg_sum(x, ids, n):
+    return jax.ops.segment_sum(x, ids, num_segments=n)
+
+
+def _gather(x, idx):
+    return jnp.take(x, idx, axis=0, mode="fill", fill_value=0)
+
+
+def _mlp_init(key, dims, dtype):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": _dense_init(k, (a, b), dtype), "b": jnp.zeros((b,), dtype)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _mlp(params, x, act=jax.nn.relu, final_act=False):
+    for i, p in enumerate(params):
+        x = x @ p["w"] + p["b"]
+        if i < len(params) - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ------------------------------------------------------------------------ GIN
+
+def init_gin(cfg: GNNConfig, key):
+    ks = jax.random.split(key, cfg.n_layers + 2)
+    d = cfg.d_hidden
+    layers = []
+    for li in range(cfg.n_layers):
+        d_in = cfg.d_in if li == 0 else d
+        layers.append({
+            "mlp": _mlp_init(ks[li], (d_in, d, d), jnp.dtype(cfg.dtype)),
+            "eps": jnp.zeros((), jnp.float32),
+        })
+    return {"layers": layers,
+            "readout": _mlp_init(ks[-1], (d, cfg.n_classes),
+                                 jnp.dtype(cfg.dtype))}
+
+
+def apply_gin(params, cfg: GNNConfig, x, src, dst):
+    n = x.shape[0]
+    for lp in params["layers"]:
+        agg = _seg_sum(_gather(x, src), dst, n)           # sum aggregator
+        x = _mlp(lp["mlp"], (1.0 + lp["eps"]) * x + agg)
+        x = constrain(x, "tp", None)
+    return _mlp(params["readout"], x)
+
+
+# -------------------------------------------------------------------- GatedGCN
+
+def init_gatedgcn(cfg: GNNConfig, key):
+    ks = jax.random.split(key, cfg.n_layers * 5 + 2)
+    d = cfg.d_hidden
+    dt = jnp.dtype(cfg.dtype)
+    layers = []
+    for li in range(cfg.n_layers):
+        o = li * 5
+        layers.append({k: _dense_init(ks[o + j], (d, d), dt)
+                       for j, k in enumerate(["A", "B", "C", "U", "V"])})
+    return {"embed": _dense_init(ks[-2], (cfg.d_in, d), dt),
+            "embed_e": _dense_init(ks[-1], (1, d), dt),
+            "layers": layers,
+            "readout": _mlp_init(jax.random.fold_in(key, 7),
+                                 (d, cfg.n_classes), dt)}
+
+
+def apply_gatedgcn(params, cfg: GNNConfig, x, src, dst, e_feat=None):
+    n = x.shape[0]
+    h = x @ params["embed"]
+    if e_feat is None:
+        e_feat = jnp.ones((src.shape[0], 1), h.dtype)
+    e = e_feat @ params["embed_e"]
+
+    def layer(carry, lp):
+        # NOTE: jax.checkpoint here made ogb_products WORSE (49→63 GiB:
+        # the bwd re-gathers are extra all-gathers and GSPMD replicates
+        # the recomputed edge tensors). Sharding constraints only;
+        # full-graph GatedGCN at 61.9M edges wants explicit shard_map
+        # edge partitioning (like core/distributed) — documented limit.
+        h, e = carry
+        hi, hj = _gather(h, dst), _gather(h, src)
+        e = e + hi @ lp["A"] + hj @ lp["B"]              # edge update
+        e = constrain(e, "nodes", None)
+        gate = jax.nn.sigmoid(e)
+        msg = gate * (hj @ lp["V"])
+        denom = _seg_sum(gate, dst, n) + 1e-6
+        h_new = h @ lp["U"] + _seg_sum(msg, dst, n) / denom
+        h = jax.nn.relu(h_new) + h                        # residual
+        h = constrain(h, "nodes", None)
+        return (h, e), None
+
+    for lp in params["layers"]:
+        (h, e), _ = layer((h, e), lp)
+    return _mlp(params["readout"], h)
+
+
+# ------------------------------------------------------------------------ GAT
+
+def init_gat(cfg: GNNConfig, key):
+    ks = jax.random.split(key, 2 * cfg.n_layers + 1)
+    dt = jnp.dtype(cfg.dtype)
+    d, hh = cfg.d_hidden, cfg.n_heads
+    layers = []
+    for li in range(cfg.n_layers):
+        d_in = cfg.d_in if li == 0 else d * hh
+        d_out = cfg.n_classes if li == cfg.n_layers - 1 else d
+        layers.append({
+            "w": _dense_init(ks[2 * li], (d_in, hh * d_out), dt),
+            "a_src": _dense_init(ks[2 * li + 1], (hh, d_out), dt),
+            "a_dst": _dense_init(jax.random.fold_in(ks[2 * li + 1], 1),
+                                 (hh, d_out), dt),
+        })
+    return {"layers": layers}
+
+
+def _edge_softmax(scores, dst, n):
+    """Per-destination softmax over incoming edges (SDDMM → segment
+    softmax), padding-safe via segment_max normalization."""
+    smax = jax.ops.segment_max(scores, dst, num_segments=n)
+    smax = jnp.where(jnp.isfinite(smax), smax, 0.0)
+    ex = jnp.exp(scores - _gather(smax, dst))
+    denom = _seg_sum(ex, dst, n)
+    return ex / jnp.maximum(_gather(denom, dst), 1e-9)
+
+
+def apply_gat(params, cfg: GNNConfig, x, src, dst):
+    n = x.shape[0]
+    n_layers = len(params["layers"])
+    h = x
+    for li, lp in enumerate(params["layers"]):
+        hh = cfg.n_heads
+        d_out = lp["w"].shape[1] // hh
+        z = (h @ lp["w"]).reshape(n, hh, d_out)
+        s_src = (z * lp["a_src"]).sum(-1)                 # (n, H)
+        s_dst = (z * lp["a_dst"]).sum(-1)
+        scores = jax.nn.leaky_relu(
+            _gather(s_src, src) + _gather(s_dst, dst), 0.2)
+        alpha = _edge_softmax(scores, dst, n)             # (E, H)
+        msg = _gather(z, src) * alpha[..., None]
+        out = _seg_sum(msg, dst, n)                       # (n, H, d_out)
+        if li < n_layers - 1:
+            h = jax.nn.elu(out.reshape(n, hh * d_out))
+        else:
+            h = out.mean(axis=1)                          # avg heads
+        h = constrain(h, "tp", None)
+    return h
+
+
+# --------------------------------------------------------------------- SchNet
+
+def init_schnet(cfg: GNNConfig, key):
+    ks = jax.random.split(key, cfg.n_layers * 4 + 3)
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_hidden
+    inter = []
+    for li in range(cfg.n_layers):
+        o = li * 4
+        inter.append({
+            "filter": _mlp_init(ks[o], (cfg.n_rbf, d, d), dt),
+            "w_in": _dense_init(ks[o + 1], (d, d), dt),
+            "w_out": _mlp_init(ks[o + 2], (d, d, d), dt),
+        })
+    return {"embed": _dense_init(ks[-3], (100, d), dt),   # atom types < 100
+            "interactions": inter,
+            "readout": _mlp_init(ks[-1], (d, d // 2, 1), dt)}
+
+
+def _rbf_expand(dist, n_rbf: int, cutoff: float):
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = 10.0 / cutoff
+    return jnp.exp(-gamma * (dist[:, None] - centers) ** 2)
+
+
+def _ssp(x):  # shifted softplus, SchNet's activation
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def apply_schnet(params, cfg: GNNConfig, atom_z, pos, src, dst):
+    """atom_z int32[n] atomic numbers, pos f32[n, 3], edges (src, dst).
+    Returns per-graph energy contribution per atom (n, 1) — callers
+    segment-sum over molecules."""
+    n = atom_z.shape[0]
+    h = jnp.take(params["embed"], atom_z, axis=0, mode="clip")
+    diff = _gather(pos, src) - _gather(pos, dst)
+    dist = jnp.sqrt((diff ** 2).sum(-1) + 1e-12)
+    rbf = _rbf_expand(dist, cfg.n_rbf, cfg.cutoff)        # (E, n_rbf)
+    fcut = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / cfg.cutoff, 0, 1)) + 1.0)
+    for lp in params["interactions"]:
+        w = _mlp(lp["filter"], rbf, act=_ssp, final_act=True)
+        w = w * fcut[:, None]                             # smooth cutoff
+        m = _gather(h @ lp["w_in"], src) * w              # cfconv messages
+        agg = _seg_sum(m, dst, n)
+        h = h + _mlp(lp["w_out"], agg, act=_ssp)
+        h = constrain(h, "tp", None)
+    return _mlp(params["readout"], h, act=_ssp)
+
+
+# ---------------------------------------------------------------- dispatcher
+
+INIT = {"gin": init_gin, "gatedgcn": init_gatedgcn, "gat": init_gat,
+        "schnet": init_schnet}
+
+
+def init_gnn(cfg: GNNConfig, key):
+    return INIT[cfg.arch](cfg, key)
+
+
+def apply_gnn(params, cfg: GNNConfig, inputs):
+    """inputs: dict with keys per arch (x/src/dst [+ pos/atom_z])."""
+    if cfg.arch == "gin":
+        return apply_gin(params, cfg, inputs["x"], inputs["src"],
+                         inputs["dst"])
+    if cfg.arch == "gatedgcn":
+        return apply_gatedgcn(params, cfg, inputs["x"], inputs["src"],
+                              inputs["dst"], inputs.get("e_feat"))
+    if cfg.arch == "gat":
+        return apply_gat(params, cfg, inputs["x"], inputs["src"],
+                         inputs["dst"])
+    if cfg.arch == "schnet":
+        return apply_schnet(params, cfg, inputs["atom_z"], inputs["pos"],
+                            inputs["src"], inputs["dst"])
+    raise ValueError(cfg.arch)
+
+
+def gnn_loss(params, cfg: GNNConfig, inputs, labels, label_mask=None):
+    out = apply_gnn(params, cfg, inputs)
+    if cfg.arch == "schnet":                              # energy regression
+        n_mol = labels.shape[0]
+        energy = jax.ops.segment_sum(out[:, 0], inputs["mol_id"],
+                                     num_segments=n_mol)
+        return jnp.mean((energy - labels) ** 2), {"mse": True}
+    logp = jax.nn.log_softmax(out.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if label_mask is not None:
+        return (nll * label_mask).sum() / jnp.maximum(label_mask.sum(), 1), {}
+    return nll.mean(), {}

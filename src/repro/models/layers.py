@@ -1,0 +1,222 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (sliding
+window, logit softcap, chunked/flash-style query blocking), gated MLPs.
+
+Pure-functional: params are plain pytrees (nested dicts of arrays);
+every layer is ``f(params, x, ...) -> y``. Sharding is applied outside
+via PartitionSpec trees matched to parameter paths (models/sharding.py),
+keeping model math independent of the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ----------------------------------------------------------------- init utils
+
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------- norms
+
+def rms_norm(g, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + g.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms_norm(d, dtype):
+    return jnp.zeros((d,), dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+
+def rope(x, positions, theta=10000.0):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+def _softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def gqa_attention(q, k, v, *, q_offset, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  kv_len: Optional[jax.Array] = None,
+                  chunk: Optional[int] = None):
+    """Grouped-query attention.
+
+    q: (B, S, H, Dh); k, v: (B, T, Hk, Dh) with H % Hk == 0.
+    q_offset: traced or static — absolute position of q[0] (decode uses
+    the cache length). kv_len: optional traced valid KV length (entries
+    beyond it are masked; used by decode with a preallocated cache).
+    chunk: query-block size for flash-style blocking (bounds the live
+    score tile to (B, Hk, G, chunk, T)).
+    """
+    from repro.models.sharding import constrain
+
+    b, s, h, dh = q.shape
+    t, hk = k.shape[1], k.shape[2]
+    g = h // hk
+    scale = dh ** -0.5
+    # Repeat KV to full head count instead of a (hk, g) grouped einsum:
+    # hk·g factorizations (8×8 at tp=16) cannot shard evenly and GSPMD
+    # pads the f32 score tensor 2x and all-gathers it; the repeated KV is
+    # head-sharded over tp, so scores stay (b, h_local, c, t) per device.
+    # EXCEPT decode (s == 1): there K/V is the whole sequence-sharded
+    # cache — repeating it materializes G full cache copies (observed
+    # 30 GiB at 524k context). Scores are tiny at s == 1, so the grouped
+    # einsum (with padded head sharding) is strictly better.
+    if g > 1 and s == 1:
+        qg = q.reshape(b, 1, hk, g, dh)
+        scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        scores = _softcap(scores, softcap)
+        kpos = jnp.arange(t)[None, :]
+        qpos = q_offset + jnp.zeros((1, 1), jnp.int32)
+        mask = jnp.ones((1, t), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        if kv_len is not None:
+            mask &= kpos < kv_len
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+        return out.astype(q.dtype).reshape(b, 1, h, dh)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        k = constrain(k, "dp", None, "tp", None)
+        v = constrain(v, "dp", None, "tp", None)
+
+    def block(q_blk, off):
+        # q_blk: (B, c, H, Dh)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q_blk.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        scores = _softcap(scores, softcap)
+        qpos = off + jnp.arange(q_blk.shape[1])[:, None]
+        kpos = jnp.arange(t)[None, :]
+        mask = jnp.ones((q_blk.shape[1], t), bool)
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        if kv_len is not None:
+            mask &= kpos < kv_len
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    if chunk is None or chunk >= s or s % chunk != 0:
+        out = block(q, q_offset)
+    else:
+        qb = q.reshape(b, s // chunk, chunk, h, dh)
+        offs = q_offset + jnp.arange(s // chunk) * chunk
+
+        @jax.checkpoint
+        def step(_, xs):
+            # checkpointed: otherwise the scan saves every chunk's f32
+            # softmax probabilities for backward (stacked (n_chunks, B,
+            # H, c, T) — GiBs at 4k x 4k).
+            qi, oi = xs
+            return None, block(qi, oi)
+
+        _, outs = lax.scan(step, None, (qb.swapaxes(0, 1), offs))
+        out = outs.swapaxes(0, 1).reshape(b, s, h, dh)
+    return out
+
+
+# ---------------------------------------------------------------------- MLPs
+
+def mlp_apply(p, x, kind: str):
+    if kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def init_mlp(key, d_model, d_ff, kind: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": _dense_init(ks[0], (d_model, d_ff), dtype),
+         "w_down": _dense_init(ks[1], (d_ff, d_model), dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = _dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+# ----------------------------------------------------------- attention block
+
+def init_attention(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": _dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": _dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": _dense_init(ks[3], (cfg.n_heads * hd, d), dtype),
+    }
+
+
+def attention_apply(p, cfg, x, *, window_arr=None, kv_cache=None,
+                    cache_len=None):
+    """Returns (out, new_kv) — new_kv is (k, v) of this call's tokens when
+    kv_cache is None, else the updated cache tuple. ``window_arr`` is a
+    traced (or static) window size so alternating local/global layers can
+    share one scanned block; None disables windowing entirely."""
+    from repro.models.sharding import constrain
+
+    b, s, d = x.shape
+    hd = cfg.head_dim_
+    offset = cache_len if cache_len is not None else jnp.zeros((), jnp.int32)
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    q = constrain(q, "dp", None, "tp", None)
+    k = constrain(k, "dp", None, "tp", None)
+    v = constrain(v, "dp", None, "tp", None)
+    positions = offset + jnp.arange(s)[None, :]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                             cache_len, axis=1)
+        cv = lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                             cache_len, axis=1)
+        out = gqa_attention(q, ck, cv, q_offset=offset,
+                            window=window_arr, softcap=cfg.attn_softcap,
+                            kv_len=cache_len + s,
+                            chunk=cfg.attention_chunk)
+        new_kv = (ck, cv)
+    else:
+        out = gqa_attention(q, k, v, q_offset=0, window=window_arr,
+                            softcap=cfg.attn_softcap,
+                            chunk=cfg.attention_chunk)
+        new_kv = (k, v)
+    out = out.reshape(b, s, cfg.n_heads * hd) @ p["wo"]
+    return out, new_kv

@@ -1,0 +1,137 @@
+"""Explicit expert-parallel MoE (shard_map) — the schedule GSPMD cannot
+find on its own (auto-sharding the sort/gather dispatch rematerializes
+the token array; the 1T config needs this path to fit).
+
+Layout inside the region (per device, mesh axes pod×data×model):
+  tokens   — sharded over (pod, data); *replicated* over model, arriving
+             from the sequence-parallel residual stream via the region
+             boundary's all-gather (Megatron-SP pattern).
+  experts  — E/|model| local experts per model rank ("no-token-movement"
+             EP: every rank routes the full local token block but
+             computes only its own experts; the final psum-scatter sums
+             the per-rank partial combines AND returns the result
+             sequence-sharded — one collective, half an all-reduce).
+  weights  — expert dim over model, f dim over (pod, data) [FSDP];
+             gathered per layer *inside* the region with an explicit
+             all_gather, so exactly one layer's experts are ever live.
+
+Routing uses the same sort + run-length gather dispatch as moe.py
+(capacity drop, per model-rank capacity C = T_loc·k·cf/E).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.sharding import _RULES, _translate
+
+
+def _axes_tuple(ax):
+    if ax is None:
+        return ()
+    return ax if isinstance(ax, tuple) else (ax,)
+
+
+def moe_apply_ep(p, cfg, x):
+    """x: (B, S, d) → (out (B, S, d), aux). Requires an active
+    sharding_rules context with a 'tp' model axis."""
+    rules = _RULES.get()
+    mesh = rules.mesh
+    model_ax = _translate(rules, "tp")
+    fsdp_axes = _axes_tuple(_translate(rules, "fsdp"))
+    dp_axes = _axes_tuple(_translate(rules, "dp"))
+    m = cfg.moe
+    b, s, d = x.shape
+    e, k = m.n_experts, m.top_k
+    p_model = mesh.shape[model_ax]
+    e_loc = e // p_model
+    xt = x.reshape(-1, d)
+    act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+
+    def region(xt, router, wg, wu, wd):
+        t_loc = xt.shape[0]
+        tk = t_loc * k
+        cap = max(1, int(t_loc * k / e * m.capacity_factor))
+        rank = lax.axis_index(model_ax)
+        e0 = rank * e_loc
+
+        # FSDP: gather this layer's expert weights over the batch axes
+        if fsdp_axes:
+            wg = lax.all_gather(wg, fsdp_axes, axis=2, tiled=True)
+            wu = lax.all_gather(wu, fsdp_axes, axis=2, tiled=True)
+            wd = lax.all_gather(wd, fsdp_axes, axis=1, tiled=True)
+
+        # matmul in activation dtype (an f32 copy of the token block is
+        # ~1 GiB/layer); softmax/top-k stay f32
+        logits = (xt @ router.astype(xt.dtype)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, ids = jax.lax.top_k(probs, k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+        gate = gate.astype(x.dtype)   # combine path stays bf16 end-to-end
+
+        ids_flat = ids.reshape(-1)
+        order = jnp.argsort(ids_flat)
+        sorted_ids = jnp.take(ids_flat, order)
+        counts = jnp.bincount(ids_flat, length=e)
+        starts = jnp.searchsorted(sorted_ids, jnp.arange(e))
+        aux = m.router_aux_weight * e * jnp.sum(
+            probs.mean(0) * counts.astype(jnp.float32) / tk)
+
+        # dispatch: gather the capacity runs of the local experts only
+        starts_loc = lax.dynamic_slice(starts, (e0,), (e_loc,))
+        counts_loc = lax.dynamic_slice(counts, (e0,), (e_loc,))
+        slot_idx = starts_loc[:, None] + jnp.arange(cap)[None, :]
+        valid = jnp.arange(cap)[None, :] \
+            < jnp.minimum(counts_loc, cap)[:, None]
+        pair = jnp.take(order, jnp.clip(slot_idx, 0, tk - 1))
+        disp = jnp.take(xt, pair // k, axis=0)             # (E_loc, C, d)
+        disp = jnp.where(valid[..., None], disp, 0)
+
+        h = act(jnp.einsum("ecd,edf->ecf", disp, wg)) \
+            * jnp.einsum("ecd,edf->ecf", disp, wu)
+        out_e = jnp.einsum("ecf,efd->ecd", h, wd)          # (E_loc, C, d)
+
+        # combine: this rank's contribution to every (token, choice), as
+        # one flat (T·k, d) bf16 gather. (A k-loop lax.scan variant was
+        # tried to cut the buffer 8x — REFUTED: the scan saves its (T, d)
+        # carry per step for backward, costing more than it saved. The
+        # earlier 7 GiB figure was f32 promotion, fixed by pinning bf16.)
+        rank_of = jnp.zeros((tk,), jnp.int32).at[order].set(
+            jnp.arange(tk, dtype=jnp.int32))
+        slot_flat = rank_of - jnp.take(starts, ids_flat)
+        local = (ids_flat >= e0) & (ids_flat < e0 + e_loc) \
+            & (slot_flat < cap)
+        gathered = out_e[jnp.clip(ids_flat - e0, 0, e_loc - 1),
+                         jnp.clip(slot_flat, 0, cap - 1)]
+        gathered = jnp.where(local[:, None], gathered.astype(x.dtype), 0)
+        partial = (gathered * gate.reshape(-1, 1)).reshape(
+            t_loc, k, d).sum(1)
+        if use_scatter:
+            # sum expert ranks AND return sequence-sharded (SP re-entry)
+            out = lax.psum_scatter(partial, model_ax, scatter_dimension=0,
+                                   tiled=True)
+        else:
+            # decode-sized token blocks (< |model|): plain all-reduce
+            out = lax.psum(partial, model_ax)
+        return out, aux
+
+    dp_prod = 1
+    for a in dp_axes:
+        dp_prod *= mesh.shape[a]
+    t_local = xt.shape[0] // dp_prod
+    use_scatter = t_local % p_model == 0 and t_local >= p_model
+    tok_out_spec = (P((dp_axes + (model_ax,)) if dp_axes else model_ax,
+                      None) if use_scatter else P(dp_axes or None, None))
+    wg_spec = P(model_ax, None, fsdp_axes or None)
+    wd_spec = P(model_ax, fsdp_axes or None, None)
+    out = jax.shard_map(
+        region, mesh=mesh,
+        in_specs=(P(dp_axes or None, None), P(None, None),
+                  wg_spec, wg_spec, wd_spec),
+        out_specs=(tok_out_spec, P()),
+        check_vma=False,
+    )(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    y, aux = out
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,154 @@
+"""Parameter / state / batch PartitionSpec trees, by parameter path.
+
+The LM zoo uses hybrid FSDP + TP: weight matrices shard their input dim
+over the batch axes ('dp' — ZeRO-3 style, required for the 1T config)
+and their output/head/expert dim over 'tp'. Optimizer states inherit
+parameter sharding automatically (zeros_like); Adafactor's factored
+vectors are replicated (tiny).
+
+Specs here are *logical* (dp/tp/sp); ``to_mesh_spec`` translates through
+a mapping (see models/sharding.py) into mesh-axis PartitionSpecs for a
+concrete mesh, dropping axes the mesh does not have.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DLRMConfig, GNNConfig, LMConfig
+from repro.models.sharding import DEFAULT_MAPPING
+
+
+def _path_str(kp) -> str:
+    out = []
+    for k in kp:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return "/".join(out)
+
+
+def _lm_rule(path: str, ndim: int) -> P:
+    last = path.split("/")[-1]
+    if "layers" in path:
+        # leading stacked-layer dim
+        if last in ("wq", "wk", "wv"):
+            return P(None, "fsdp", "tp")
+        if last == "wo":
+            return P(None, "tp", "fsdp")
+        if "moe" in path:
+            if last == "router":
+                return P(None, None, None)
+            if "shared" in path:
+                if last in ("w_gate", "w_up"):
+                    return P(None, "fsdp", "tp")
+                return P(None, "tp", "fsdp")
+            if last in ("w_gate", "w_up"):        # (L, E, d, f)
+                return P(None, "tp", None, "fsdp")
+            if last == "w_down":                  # (L, E, f, d)
+                return P(None, "tp", "fsdp", None)
+        if last in ("w_gate", "w_up"):
+            return P(None, "fsdp", "tp")
+        if last == "w_down":
+            return P(None, "tp", "fsdp")
+        if last == "eps":
+            return P(None)
+        return P(None, None)                      # norms (L, d)
+    if last == "embed":
+        # rows over tp only: sharding d over fsdp would force the loss
+        # matmul to re-shard activations from batch- to d-sharded (the
+        # same physical axes), replicating the batch — observed 60+ GiB
+        # of f32 loss-path temps on the 1T config.
+        return P("tp", None)
+    if last == "unembed":
+        return P(None, "tp")
+    return P(None)                                # final_norm etc.
+
+
+def lm_param_specs(params_shape) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: _lm_rule(_path_str(kp), x.ndim), params_shape)
+
+
+def lm_layer_slice_rule(path_in_layer: str) -> P:
+    """Spec of ONE layer's slice (leading stacked-L dim stripped) — used
+    to re-constrain the slice inside the layer scan so weight gathers
+    happen per-layer inside the loop, not on the full stack before it."""
+    full = _lm_rule("layers/" + path_in_layer, 0)
+    return P(*tuple(full)[1:])
+
+
+def gnn_param_specs(params_shape) -> Any:
+    # GNN weights are tiny — replicate everything.
+    return jax.tree.map(lambda x: P(), params_shape)
+
+
+def dlrm_param_specs(params_shape) -> Any:
+    def rule(kp, x):
+        path = _path_str(kp)
+        if "tables" in path:
+            # rows over the batch axes (padded to x512 at init), embedding
+            # dim over tp — both always divisible.
+            return P("fsdp", "tp")
+        return P()
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def cache_specs(long_context: bool = False) -> Any:
+    """KV cache (L, B, S, Hk, Dh): batch over dp, sequence over sp
+    (flash-decoding style partial-softmax combining — KV head counts
+    (1/8/16) don't divide a 16-wide tp axis, and head-replicated caches
+    would not fit HBM). Long-context (B == 1) maps sp to *all* axes."""
+    kv = P(None, None if long_context else "dp", "sp", None, None)
+    return {"k": kv, "v": kv, "len": P()}
+
+
+def state_specs_like(param_specs, state_shape) -> Any:
+    """Optimizer-state specs: moment trees mirror the parameter tree and
+    inherit its specs (ZeRO for free); factored/scalar state replicates."""
+    out = {}
+    for k, v in state_shape.items():
+        if k in ("m", "v"):                       # adam/sgd moments
+            out[k] = param_specs
+        elif k == "f":                            # adafactor factors
+            out[k] = jax.tree.map(lambda x: P(), v)
+        else:                                     # step, grad_norm, ...
+            out[k] = P()
+    return out
+
+
+def to_mesh_spec(spec: P, mesh: Mesh, mapping=None) -> P:
+    mapping = dict(DEFAULT_MAPPING, **(mapping or {}))
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        logical = entry if isinstance(entry, tuple) else (entry,)
+        axes = []
+        for name in logical:
+            ax = mapping.get(name, name)
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                if a in mesh.axis_names and a not in axes:
+                    axes.append(a)
+        out.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes
+                                                      else None))
+    return P(*out)
+
+
+def tree_to_mesh(spec_tree, mesh: Mesh, mapping=None):
+    return jax.tree.map(
+        lambda s: to_mesh_spec(s, mesh, mapping), spec_tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def tree_to_shardings(spec_tree, mesh: Mesh, mapping=None):
+    mesh_specs = tree_to_mesh(spec_tree, mesh, mapping)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), mesh_specs,
+        is_leaf=lambda s: isinstance(s, P))

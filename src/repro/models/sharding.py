@@ -1,0 +1,113 @@
+"""Logical-axis sharding rules (MaxText-style, trimmed).
+
+Models annotate activations/intermediates with *logical* axis names via
+``constrain``; a context installed by the launcher maps logical names to
+mesh axes. Outside any context ``constrain`` is a no-op, so unit tests
+and single-device smoke runs never touch device APIs.
+
+Logical axes used across the zoo:
+  dp   — batch-like (data × pod)
+  tp   — tensor-parallel (heads / d_ff / vocab / experts)
+  sp   — sequence (long-context KV sharding)
+  ep_cap — MoE capacity rows (sharded over dp to bound dispatch memory)
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_RULES: contextvars.ContextVar = contextvars.ContextVar(
+    "sharding_rules", default=None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    mesh: Mesh
+    mapping: dict  # logical name -> mesh axis | tuple | None
+
+
+DEFAULT_MAPPING = {
+    "dp": ("pod", "data"),        # batch-like activations
+    "fsdp": ("pod", "data"),      # weight sharding (ZeRO-3 / row-sharded)
+    "tp": "model",
+    "sp": "model",
+    "ep_cap": ("pod", "data"),
+}
+
+
+def _translate(rules: ShardingRules, name):
+    if name is None:
+        return None
+    ax = rules.mapping.get(name)
+    if ax is None:
+        return None
+    if isinstance(ax, tuple):
+        present = tuple(a for a in ax if a in rules.mesh.axis_names)
+        return present or None
+    return ax if ax in rules.mesh.axis_names else None
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Mesh, mapping: Optional[dict] = None):
+    rules = ShardingRules(mesh, dict(DEFAULT_MAPPING, **(mapping or {})))
+    token = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(token)
+
+
+def constrain(x, *logical_names):
+    """Apply a sharding constraint expressed in logical axis names; no-op
+    when no rules are installed (CPU tests)."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    spec = P(*[_translate(rules, n) for n in logical_names])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def constrain_spec(x, spec):
+    """Like ``constrain`` but takes a PartitionSpec of logical names
+    (entries may be tuples of logical names). Drops axes whose size does
+    not divide the dimension."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    out = []
+    for dim, entry in zip(x.shape, tuple(spec) + (None,) * (x.ndim
+                                                            - len(spec))):
+        if entry is None:
+            out.append(None)
+            continue
+        logical = entry if isinstance(entry, tuple) else (entry,)
+        axes = []
+        for name in logical:
+            ax = _translate(rules, name)
+            if ax is None:
+                continue
+            for a in (ax if isinstance(ax, tuple) else (ax,)):
+                if a not in axes:
+                    axes.append(a)
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= rules.mesh.shape[a]
+            if dim % prod == 0:
+                break
+            axes.pop()
+        out.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes
+                                                      else None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*out)))
+
+
+def current_mesh() -> Optional[Mesh]:
+    rules = _RULES.get()
+    return rules.mesh if rules else None

@@ -1,0 +1,248 @@
+"""Decoder-only transformer LM: dense and MoE variants, GQA, sliding
+window (gemma2 alternating pattern), attention/logit softcaps, tied
+embeddings — the five assigned LM architectures are instances of this
+one module (configs/*.py).
+
+Layers are **scanned** (stacked parameters, ``lax.scan`` over the layer
+axis): at 61 layers × 512 devices this keeps dry-run compile times and
+HLO size flat in depth. Alternating local attention is handled with a
+traced per-layer window so the scan body stays uniform.
+
+API (all pure):
+  init_lm(cfg, key)                      → params
+  apply_lm(params, cfg, tokens)          → (logits, aux)    # training
+  lm_loss(params, cfg, tokens, labels)   → (loss, metrics)  # chunked xent
+  init_cache(cfg, batch, max_len, dtype) → cache
+  prefill(params, cfg, tokens, cache)    → (logits_last, cache)
+  decode_step(params, cfg, cache, tok)   → (logits, cache)
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import LMConfig
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    _dense_init,
+    attention_apply,
+    init_attention,
+    init_mlp,
+    init_rms_norm,
+    mlp_apply,
+    rms_norm,
+)
+from repro.models.sharding import constrain
+
+_BIG_WINDOW = 1 << 30
+
+
+def _init_layer(cfg: LMConfig, key):
+    ka, km, kn = jax.random.split(key, 3)
+    p = {
+        "attn": init_attention(key=ka, cfg=cfg, dtype=cfg.pdtype),
+        "attn_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+        "mlp_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.init_moe(km, cfg, cfg.pdtype)
+    else:
+        p["mlp"] = init_mlp(km, cfg.d_model, cfg.d_ff, cfg.mlp, cfg.pdtype)
+    if cfg.attn_softcap is not None:  # gemma2 family: post-block norms
+        p["post_attn_norm"] = init_rms_norm(cfg.d_model, cfg.pdtype)
+        p["post_mlp_norm"] = init_rms_norm(cfg.d_model, cfg.pdtype)
+    return p
+
+
+def init_lm(cfg: LMConfig, key):
+    ke, kl, ku = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(partial(_init_layer, cfg))(layer_keys)
+    params = {
+        "embed": _dense_init(ke, (cfg.vocab, cfg.d_model), cfg.pdtype,
+                             scale=0.02),
+        "layers": layers,
+        "final_norm": init_rms_norm(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _dense_init(ku, (cfg.d_model, cfg.vocab),
+                                        cfg.pdtype)
+    return params
+
+
+def _layer_window(cfg: LMConfig, idx):
+    """Traced per-layer attention window (None ⇒ no window op at all)."""
+    if cfg.window is None:
+        return None
+    if cfg.window_pattern <= 1:
+        return jnp.int32(cfg.window)
+    return jnp.where(idx % cfg.window_pattern == 0,
+                     jnp.int32(cfg.window), jnp.int32(_BIG_WINDOW))
+
+
+def _constrain_layer_slice(lp):
+    """Pin this layer's parameter slice to its (layer-dim-stripped)
+    sharding. Without this, GSPMD may hoist the FSDP all-gather of the
+    *whole stacked* (L, ...) weight array out of the scan — 61 layers of
+    gathered expert weights live at once sank the 1T config. No-op
+    outside a sharding_rules context."""
+    from repro.models.param_sharding import lm_layer_slice_rule
+    from repro.models.sharding import constrain_spec
+
+    def rule(kp, x):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", "")))
+                        for k in kp)
+        return constrain_spec(x, lm_layer_slice_rule(path))
+
+    return jax.tree_util.tree_map_with_path(rule, lp)
+
+
+def _block(cfg: LMConfig, lp, x, idx, kv=None, cache_len=None):
+    """One transformer block. Returns (x, aux, new_kv)."""
+    lp = _constrain_layer_slice(lp)
+    window = _layer_window(cfg, idx)
+    # Pin the loop-carried residual to its sequence-parallel sharding at
+    # body ENTRY as well: otherwise GSPMD resolves the carry's layout
+    # from the attention all-gather that immediately consumes it, and
+    # every layer's saved remat checkpoint materializes seq-gathered
+    # (~470 MB/layer on the 1T config instead of ~30 MB).
+    x = constrain(x, "dp", "act_seq", None)
+    h = rms_norm(lp["attn_norm"], x)
+    attn_out, new_kv = attention_apply(
+        lp["attn"], cfg, h, window_arr=window, kv_cache=kv,
+        cache_len=cache_len)
+    if cfg.attn_softcap is not None:
+        attn_out = rms_norm(lp["post_attn_norm"], attn_out)
+    # 'act_seq' maps to the model axis during training (sequence
+    # parallelism): the residual stream — and therefore each layer's saved
+    # remat checkpoint — is sharded over seq, not replicated across tp.
+    x = constrain(x + attn_out, "dp", "act_seq", None)
+    h = rms_norm(lp["mlp_norm"], x)
+    if cfg.moe is not None:
+        ff, aux = moe_lib.moe_apply(lp["moe"], cfg, h)
+    else:
+        ff, aux = mlp_apply(lp["mlp"], h, cfg.mlp), jnp.zeros((),
+                                                              jnp.float32)
+    if cfg.attn_softcap is not None:
+        ff = rms_norm(lp["post_mlp_norm"], ff)
+    x = constrain(x + ff, "dp", "act_seq", None)
+    return x, aux, new_kv
+
+
+def _stack_scan(cfg: LMConfig, params, x, cache=None, cache_len=None):
+    """Scan over stacked layer params (and KV cache slices, if serving)."""
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+
+    if cache is None:
+        def body(carry, scanned):
+            x, aux = carry
+            lp, idx = scanned
+            x, a, _ = _block(cfg, lp, x, idx)
+            return (x, aux + a), None
+
+        body = jax.checkpoint(body) if cfg.remat else body
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (params["layers"], idxs))
+        return x, aux, None
+
+    def body(carry, scanned):
+        x, aux = carry
+        lp, idx, ck, cv = scanned
+        x, a, (nk, nv) = _block(cfg, lp, x, idx, kv=(ck, cv),
+                                cache_len=cache_len)
+        return (x, aux + a), (nk, nv)
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), (nk, nv) = lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["layers"], idxs, cache["k"], cache["v"]))
+    return x, aux, {"k": nk, "v": nv}
+
+
+def _logits(params, cfg: LMConfig, x):
+    x = rms_norm(params["final_norm"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = x @ w.astype(x.dtype)
+    if cfg.logit_softcap is not None:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return constrain(logits, "dp", None, "tp")
+
+
+def _embed(params, cfg: LMConfig, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.adtype)
+    return constrain(x, "dp", None, None)
+
+
+def apply_lm(params, cfg: LMConfig, tokens):
+    """Training forward: tokens int32[B, S] → (logits f32[B, S, V], aux)."""
+    x = _embed(params, cfg, tokens)
+    x, aux, _ = _stack_scan(cfg, params, x)
+    return _logits(params, cfg, x), aux
+
+
+def lm_loss(params, cfg: LMConfig, tokens, labels, loss_chunk: int = 512):
+    """Next-token cross-entropy, computed over sequence chunks so the
+    (B, S, V) logits tensor is never fully materialized (vocab 160k ×
+    1M tokens would be ~600 GB)."""
+    x = _embed(params, cfg, tokens)
+    x, aux, _ = _stack_scan(cfg, params, x)
+    x = rms_norm(params["final_norm"], x)
+    w = (params["embed"].T if cfg.tie_embeddings
+         else params["unembed"]).astype(x.dtype)
+
+    b, s, d = x.shape
+    c = min(loss_chunk, s)
+    assert s % c == 0
+    xc = x.reshape(b, s // c, c, d).swapaxes(0, 1)       # (S/c, B, c, d)
+    lc = labels.reshape(b, s // c, c).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_loss(carry, xs):
+        # checkpointed: without it the scan saves every chunk's (B, c, V)
+        # logits for backward — ~21 GiB/device at vocab 164k.
+        xi, li = xs
+        logits = xi @ w
+        if cfg.logit_softcap is not None:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        logits = constrain(logits.astype(jnp.float32), "dp", None, "tp")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return carry + (lse - gold).sum(), None
+
+    total, _ = lax.scan(chunk_loss, jnp.zeros((), jnp.float32), (xc, lc))
+    loss = total / (b * s) + aux
+    return loss, {"xent": total / (b * s), "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.adtype
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+    return {
+        "k": constrain(jnp.zeros(shape, dtype), None, "dp", "sp", None, None),
+        "v": constrain(jnp.zeros(shape, dtype), None, "dp", "sp", None, None),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, cfg: LMConfig, tokens, cache):
+    """Run the prompt through the model, filling cache[0:S]."""
+    x = _embed(params, cfg, tokens)
+    x, _, kv = _stack_scan(cfg, params, x, cache=cache,
+                           cache_len=jnp.zeros((), jnp.int32))
+    cache = {"k": kv["k"], "v": kv["v"],
+             "len": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return _logits(params, cfg, x[:, -1:]), cache
+
+
+def decode_step(params, cfg: LMConfig, cache, tokens):
+    """One decode step: tokens int32[B, 1] → (logits [B, 1, V], cache)."""
+    x = _embed(params, cfg, tokens)
+    x, _, kv = _stack_scan(cfg, params, x, cache=cache,
+                           cache_len=cache["len"])
+    cache = {"k": kv["k"], "v": kv["v"], "len": cache["len"] + 1}
+    return _logits(params, cfg, x), cache

@@ -1,0 +1,13 @@
+from repro.optim.optimizers import (
+    BY_NAME,
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    sgdm,
+    warmup_cosine,
+)
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgdm", "warmup_cosine",
+           "clip_by_global_norm", "global_norm", "BY_NAME"]

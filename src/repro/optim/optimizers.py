@@ -1,0 +1,187 @@
+"""Optimizers as pure (init, update) pairs over parameter pytrees.
+
+AdamW (ZeRO-1 friendly: states inherit parameter sharding), Adafactor
+(factored second moment — the only feasible choice for the 1T MoE config,
+DESIGN.md §6), SGD-momentum, global-norm clipping, warmup-cosine
+schedule. No optax dependency — the container is offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def adamw(lr, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0,
+          clip_norm: float | None = 1.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32),
+                "grad_norm": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            new_p = p.astype(jnp.float32) - lr_t * (u + weight_decay
+                                                    * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda t: t[0], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step,
+                       "grad_norm": gnorm}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr, decay=0.8, eps=1e-30, clip_norm: float | None = 1.0,
+              min_dim_size_to_factor: int = 128):
+    """Factored second-moment (Shazeer & Stern): matrices keep only row
+    and column RMS statistics — O(n+m) state instead of O(n·m)."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(shape):
+        return (len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor
+                and shape[-2] >= min_dim_size_to_factor)
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+        return {"f": jax.tree.map(st, params),
+                "step": jnp.zeros((), jnp.int32),
+                "grad_norm": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+        lr_t = lr_fn(step)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(-1, keepdims=True)[..., None],
+                                       eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            # relative step clipping (RMS-1 trunc) as in the paper
+            u = u / jnp.maximum(1.0, jnp.sqrt(jnp.mean(u * u)))
+            new_p = (p.astype(jnp.float32) - lr_t * u).astype(p.dtype)
+            return new_p, ns
+
+        def upd_maybe_chunked(p, g, s):
+            # For stacked-layer weights (ndim >= 3), run the update one
+            # layer slice at a time: the elementwise f32 temps (g², u,
+            # denom, p32) of a (61, 24, 7168, 64) stack are ~2.5 GiB
+            # EACH — chunking turns ~15 GiB of optimizer temps into
+            # ~50 MiB. Factoring is over the last two dims, so slicing
+            # the leading dim is exact.
+            if p.ndim >= 3 and p.size * 4 > (1 << 28):
+                return jax.lax.map(lambda t: upd(*t), (p, g, s))
+            return upd(p, g, s)
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["f"])
+        outs = [upd_maybe_chunked(p, g, s)
+                for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_f = treedef.unflatten([o[1] for o in outs])
+        return new_p, {"f": new_f, "step": step, "grad_norm": gnorm}
+
+    return Optimizer(init, update)
+
+
+def sgdm(lr, momentum=0.9, clip_norm: float | None = None):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"m": jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+            "grad_norm": jnp.zeros((), jnp.float32)}
+
+    def update(grads, state, params):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        new_m = jax.tree.map(lambda m, g: momentum * m
+                             + g.astype(jnp.float32), state["m"], grads)
+        new_p = jax.tree.map(lambda p, m: (p.astype(jnp.float32)
+                                           - lr_t * m).astype(p.dtype),
+                             params, new_m)
+        return new_p, {"m": new_m, "step": step, "grad_norm": gnorm}
+
+    return Optimizer(init, update)
+
+
+BY_NAME = {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}

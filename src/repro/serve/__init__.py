@@ -1,0 +1,3 @@
+from repro.serve.decode import BatchServer, Request, generate
+
+__all__ = ["generate", "BatchServer", "Request"]

@@ -1,0 +1,115 @@
+"""Batched serving: prefill + greedy decode over a preallocated KV
+cache, plus a slot-based continuous-batching server for mixed request
+streams (the 'serve a small model with batched requests' driver).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models.transformer import (
+    decode_step,
+    init_cache,
+    prefill,
+)
+
+
+def generate(params, cfg: LMConfig, prompts, n_new: int, max_len=None):
+    """prompts int32[B, S] → generated int32[B, n_new] (greedy)."""
+    b, s = prompts.shape
+    max_len = max_len or (s + n_new)
+    cache = init_cache(cfg, b, max_len)
+    logits, cache = prefill(params, cfg, prompts, cache)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+    def body(carry, _):
+        tok, cache = carry
+        logits, cache = decode_step(params, cfg, cache, tok)
+        nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return (nxt, cache), tok[:, 0]
+
+    (_, _), toks = jax.lax.scan(body, (tok, cache), None, length=n_new)
+    return toks.T                                    # (B, n_new)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchServer:
+    """Slot-based continuous batching: up to ``n_slots`` concurrent
+    sequences share one batched KV cache; finished slots are refilled
+    from the queue. Single jitted decode program for every step
+    (prefills run per-request at admission)."""
+
+    def __init__(self, params, cfg: LMConfig, n_slots: int, max_len: int,
+                 eos_id: int = 1):
+        self.params, self.cfg = params, cfg
+        self.n_slots, self.max_len, self.eos = n_slots, max_len, eos_id
+        self.cache = init_cache(cfg, n_slots, max_len)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.queue: List[Request] = []
+        self._decode = jax.jit(lambda p, c, t: decode_step(p, cfg, c, t))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.n_slots):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                # per-slot prefill into the shared cache
+                sub = init_cache(self.cfg, 1, self.max_len)
+                logits, sub = prefill(self.params, self.cfg,
+                                      jnp.asarray(req.prompt[None]), sub)
+                for kk in ("k", "v"):
+                    self.cache[kk] = self.cache[kk].at[:, i:i + 1].set(
+                        sub[kk])
+                first = int(jnp.argmax(logits[0, -1]))
+                req.generated.append(first)
+                self.slots[i] = req
+        # shared scalar length: slots track their own logical lengths; the
+        # cache len is the max prompt+generated across active slots
+        lens = [len(r.prompt) + len(r.generated)
+                for r in self.slots if r is not None]
+        if lens:
+            self.cache["len"] = jnp.asarray(max(lens), jnp.int32)
+
+    def step(self):
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return []
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slots[i].generated[-1]
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        finished = []
+        for i in active:
+            req = self.slots[i]
+            req.generated.append(int(nxt[i]))
+            if len(req.generated) >= req.max_new or int(nxt[i]) == self.eos:
+                req.done = True
+                finished.append(req)
+                self.slots[i] = None
+        return finished
+
+    def run_to_completion(self, max_steps: int = 10_000):
+        done = []
+        for _ in range(max_steps):
+            done += self.step()
+            if not self.queue and all(s is None for s in self.slots):
+                break
+        return done

@@ -1,0 +1,11 @@
+from repro.train.steps import init_residuals, make_train_step
+from repro.train.trainer import (
+    SimulatedFailure,
+    StepWatchdog,
+    Trainer,
+    TrainerConfig,
+    run_with_restarts,
+)
+
+__all__ = ["make_train_step", "init_residuals", "Trainer", "TrainerConfig",
+           "SimulatedFailure", "StepWatchdog", "run_with_restarts"]

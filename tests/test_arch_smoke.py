@@ -1,0 +1,113 @@
+"""Per-architecture smoke tests: instantiate the REDUCED config of each
+assigned arch, run one forward/train step on CPU, assert output shapes
+and absence of NaNs. (Full configs are exercised compile-only by the
+dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, family_of, get_config
+from repro.data import SyntheticClicks, SyntheticTokens, gnn_full_batch
+from repro.graphs import random_graph
+from repro.models import dlrm as dlrm_lib
+from repro.models import gnn as gnn_lib
+from repro.models import transformer as tf_lib
+from repro.optim import adamw
+from repro.train import make_train_step
+
+LM_ARCHS = [a for a in ARCH_IDS if family_of(a) == "lm"]
+GNN_ARCHS = [a for a in ARCH_IDS if family_of(a) == "gnn"]
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = tf_lib.init_lm(cfg, jax.random.key(0))
+    data = SyntheticTokens(vocab=cfg.vocab, batch=2, seq_len=32)
+    loss_fn = lambda p, b: tf_lib.lm_loss(p, cfg, b["tokens"], b["labels"],
+                                          loss_chunk=16)
+    step = make_train_step(loss_fn, adamw(1e-3), donate=False)
+    opt = adamw(1e-3)
+    st = opt.init(params)
+    p2, st, _, metrics = step(params, st, None, data.batch_at(0))
+    assert jnp.isfinite(metrics["loss"]), arch
+    # params actually changed
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)))
+    assert moved, arch
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_serve(arch):
+    cfg = get_config(arch, smoke=True)
+    params = tf_lib.init_lm(cfg, jax.random.key(0))
+    cache = tf_lib.init_cache(cfg, 2, 64)
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab)
+    logits, cache = tf_lib.prefill(params, cfg, toks, cache)
+    assert logits.shape == (2, 1, cfg.vocab)
+    logits, cache = tf_lib.decode_step(params, cfg, cache, toks[:, :1])
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+    assert int(cache["len"]) == 17
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    g = random_graph(60, 240, seed=3)
+    params = gnn_lib.init_gnn(cfg, jax.random.key(0))
+    if cfg.arch == "schnet":
+        from repro.data import molecule_batch
+        mb = molecule_batch(4, 10, 24, seed=1)
+        inputs = dict(atom_z=mb["atom_z"], pos=mb["pos"], src=mb["src"],
+                      dst=mb["dst"], mol_id=mb["mol_id"])
+        loss, _ = gnn_lib.gnn_loss(params, cfg, inputs, mb["energy"])
+        grads = jax.grad(lambda p: gnn_lib.gnn_loss(
+            p, cfg, inputs, mb["energy"])[0])(params)
+    else:
+        fb = gnn_full_batch(60, cfg.d_in, cfg.n_classes, seed=1)
+        inputs = dict(x=fb["x"], src=g.src, dst=g.dst)
+        loss, _ = gnn_lib.gnn_loss(params, cfg, inputs, fb["labels"],
+                                   fb["label_mask"])
+        grads = jax.grad(lambda p: gnn_lib.gnn_loss(
+            p, cfg, inputs, fb["labels"], fb["label_mask"])[0])(params)
+    assert jnp.isfinite(loss)
+    assert all(bool(jnp.isfinite(l).all()) for l in jax.tree.leaves(grads))
+
+
+def test_dlrm_smoke_train_step():
+    cfg = get_config("dlrm-mlperf", smoke=True)
+    params = dlrm_lib.init_dlrm(cfg, jax.random.key(0))
+    data = SyntheticClicks(cfg.vocab_sizes, cfg.n_dense, batch=32)
+    b = data.batch_at(0)
+    loss, _ = dlrm_lib.dlrm_loss(params, cfg, b["dense"], b["sparse"],
+                                 b["labels"])
+    assert jnp.isfinite(loss)
+    logits = dlrm_lib.apply_dlrm(params, cfg, b["dense"], b["sparse"])
+    assert logits.shape == (32,)
+    cand = jax.random.normal(jax.random.key(2), (500, cfg.embed_dim))
+    s, i = dlrm_lib.retrieval_score(params, cfg, b["dense"][:1],
+                                    b["sparse"][:1], cand, top_k=7)
+    assert s.shape == (1, 7) and bool((i < 500).all())
+
+
+def test_full_configs_param_counts():
+    """Sanity-check the headline parameter counts of the full configs
+    (the 1T MoE must actually be ~1T; active ~32B)."""
+    kimi = get_config("kimi-k2-1t-a32b")
+    assert 0.9e12 < kimi.n_params() < 1.2e12, kimi.n_params()
+    assert 20e9 < kimi.n_active_params() < 40e9, kimi.n_active_params()
+    # NOTE: the assigned spec (48L x 64e x d_ff 1408) arithmetically gives
+    # ~28B total / ~4B active; the '16b' in the name corresponds to the
+    # released 27-layer Moonlight. We implement the assigned spec verbatim.
+    moonshot = get_config("moonshot-v1-16b-a3b")
+    assert 20e9 < moonshot.n_params() < 35e9
+    assert 2e9 < moonshot.n_active_params() < 6e9
+    granite = get_config("granite-20b")
+    assert 15e9 < granite.n_params() < 25e9
+    yi = get_config("yi-34b")
+    assert 30e9 < yi.n_params() < 40e9
+    gemma = get_config("gemma2-9b")
+    assert 8e9 < gemma.n_params() < 12e9

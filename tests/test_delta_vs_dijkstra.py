@@ -1,0 +1,122 @@
+"""Δ-stepping engine vs the Dijkstra oracle across graph families,
+strategies, pred modes and Δ values — the correctness core of the repro."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    DeltaConfig,
+    DeltaSteppingSolver,
+    delta_stepping,
+    dijkstra,
+    validate_pred_tree,
+)
+from repro.graphs import (
+    grid_map,
+    random_graph,
+    rmat,
+    square_lattice,
+    watts_strogatz,
+)
+from repro.graphs.structures import INF32
+
+
+def _graphs():
+    g, _ = grid_map(25, 31, 0.15, seed=3)
+    return {
+        "smallworld": watts_strogatz(300, 6, 0.05, seed=0),
+        "smallworld_dense": watts_strogatz(120, 10, 0.3, seed=1),
+        "rmat": rmat(256, 2500, seed=2),
+        "gamemap": g,
+        "lattice": square_lattice(17, weighted=True, seed=4),
+        "disconnected": random_graph(150, 180, seed=5),
+    }
+
+
+GRAPHS = _graphs()
+
+
+@pytest.mark.parametrize("name", sorted(GRAPHS))
+@pytest.mark.parametrize("strategy", ["edge", "ell"])
+@pytest.mark.parametrize("delta", [1, 5, 13, 100])
+def test_matches_dijkstra(name, strategy, delta):
+    g = GRAPHS[name]
+    dref, _ = dijkstra(g, 0)
+    res = delta_stepping(g, 0, DeltaConfig(delta=delta, strategy=strategy))
+    np.testing.assert_array_equal(np.asarray(res.dist, np.int64), dref)
+    assert not bool(res.overflow)
+
+
+@pytest.mark.parametrize("name", ["smallworld", "rmat", "gamemap"])
+@pytest.mark.parametrize("pred_mode", ["argmin", "packed"])
+def test_pred_tree_valid(name, pred_mode):
+    g = GRAPHS[name]
+    ctx = jax.enable_x64(True) if pred_mode == "packed" else _null()
+    with ctx:
+        res = delta_stepping(g, 0, DeltaConfig(delta=10, pred_mode=pred_mode))
+        dist = np.asarray(res.dist, np.int64)
+        pred = np.asarray(res.pred)
+    dref, _ = dijkstra(g, 0)
+    np.testing.assert_array_equal(dist, dref)
+    assert validate_pred_tree(g, 0, dist, pred)
+    assert pred[0] == -1
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def test_multiple_sources_one_solver():
+    g = GRAPHS["smallworld"]
+    solver = DeltaSteppingSolver(g, DeltaConfig(delta=10))
+    for s in [0, 7, 299]:
+        dref, _ = dijkstra(g, s)
+        np.testing.assert_array_equal(
+            np.asarray(solver.solve(s).dist, np.int64), dref)
+
+
+def test_unreachable_nodes_stay_inf():
+    g = GRAPHS["disconnected"]
+    res = delta_stepping(g, 0, DeltaConfig(delta=10))
+    dref, _ = dijkstra(g, 0)
+    d = np.asarray(res.dist, np.int64)
+    np.testing.assert_array_equal(d, dref)
+    unreached = d >= int(INF32)
+    assert unreached.any(), "test graph should be disconnected"
+    assert (np.asarray(res.pred)[unreached] == -1).all()
+
+
+def test_delta_invariance():
+    """The paper sweeps Δ for performance (Fig. 1); the result must not
+    depend on it."""
+    g = GRAPHS["rmat"]
+    base = np.asarray(delta_stepping(g, 3, DeltaConfig(delta=1)).dist)
+    for delta in [2, 3, 7, 19, 50]:
+        d = np.asarray(delta_stepping(g, 3, DeltaConfig(delta=delta)).dist)
+        np.testing.assert_array_equal(d, base)
+
+
+def test_iteration_counts_shrink_with_delta():
+    """Larger Δ ⇒ fewer buckets (outer iterations), the knob the paper
+    trades against redundant work."""
+    g = GRAPHS["smallworld"]
+    o_small = int(delta_stepping(g, 0, DeltaConfig(delta=1)).outer_iters)
+    o_large = int(delta_stepping(g, 0, DeltaConfig(delta=50)).outer_iters)
+    assert o_large < o_small
+
+
+def test_ell_frontier_capacity_overflow_flag():
+    g = GRAPHS["smallworld_dense"]
+    res = delta_stepping(
+        g, 0, DeltaConfig(delta=100, strategy="ell", frontier_cap=2))
+    assert bool(res.overflow)
+
+
+def test_source_self_distance_zero():
+    for name, g in GRAPHS.items():
+        res = delta_stepping(g, 0, DeltaConfig(delta=10))
+        assert int(res.dist[0]) == 0, name

@@ -1,0 +1,69 @@
+"""Property-based tests (hypothesis) for the Δ-stepping engine.
+
+Invariants checked on arbitrary random digraphs:
+  1. distances equal two independent oracles (heap Dijkstra, Bellman-Ford);
+  2. triangle inequality along every edge: dist[v] <= dist[u] + w(u,v)
+     whenever dist[u] is finite;
+  3. every finite distance is witnessed by a valid predecessor tree;
+  4. the result is invariant to Δ and to the relaxation strategy.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DeltaConfig,
+    bellman_ford,
+    delta_stepping,
+    dijkstra,
+    validate_pred_tree,
+)
+from repro.graphs import random_graph
+from repro.graphs.structures import INF32
+
+graph_params = st.tuples(
+    st.integers(min_value=2, max_value=60),      # n
+    st.integers(min_value=0, max_value=240),     # m
+    st.integers(min_value=0, max_value=2**31 - 1),  # seed
+    st.integers(min_value=1, max_value=40),      # delta
+    st.integers(min_value=1, max_value=25),      # max weight
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(graph_params)
+def test_matches_both_oracles(params):
+    n, m, seed, delta, w_hi = params
+    g = random_graph(n, m, seed=seed, w_lo=1, w_hi=w_hi)
+    src = seed % n
+    res = delta_stepping(g, src, DeltaConfig(delta=delta))
+    d = np.asarray(res.dist, np.int64)
+    np.testing.assert_array_equal(d, dijkstra(g, src)[0])
+    np.testing.assert_array_equal(d, bellman_ford(g, src))
+
+
+@settings(max_examples=40, deadline=None)
+@given(graph_params)
+def test_triangle_inequality_and_pred(params):
+    n, m, seed, delta, w_hi = params
+    g = random_graph(n, m, seed=seed, w_lo=1, w_hi=w_hi)
+    src = (seed // 7) % n
+    res = delta_stepping(g, src, DeltaConfig(delta=delta))
+    d = np.asarray(res.dist, np.int64)
+    es, ed = np.asarray(g.src), np.asarray(g.dst)
+    ew = np.asarray(g.w, np.int64)
+    fin = d[es] < int(INF32)
+    assert (d[ed][fin] <= d[es][fin] + ew[fin]).all()
+    assert validate_pred_tree(g, src, d, np.asarray(res.pred))
+
+
+@settings(max_examples=25, deadline=None)
+@given(graph_params)
+def test_strategy_equivalence(params):
+    n, m, seed, delta, w_hi = params
+    g = random_graph(n, m, seed=seed, w_lo=1, w_hi=w_hi)
+    src = seed % n
+    d_edge = np.asarray(
+        delta_stepping(g, src, DeltaConfig(delta=delta, strategy="edge")).dist)
+    d_ell = np.asarray(
+        delta_stepping(g, src, DeltaConfig(delta=delta, strategy="ell")).dist)
+    np.testing.assert_array_equal(d_edge, d_ell)

