@@ -1,4 +1,6 @@
-"""Shared benchmark utilities: wall-clock timing with warmup, CSV rows.
+"""Shared benchmark utilities: wall-clock timing with warmup, CSV rows,
+and an in-process record of every row so the driver can emit
+machine-readable ``BENCH_<name>.json`` perf records.
 
 Sizes are scaled down from the paper's (single CPU core here vs 24-core
 Xeon there) but keep the paper's *structure*: same graph families, same
@@ -8,9 +10,13 @@ parameter grids, same comparisons. Each bench prints
 from __future__ import annotations
 
 import time
+from typing import Dict, List
 
 import jax
 import numpy as np
+
+# rows recorded since the last drain_records() call, in emit order
+_RECORDS: List[Dict] = []
 
 
 def time_fn(fn, *args, reps: int = 3, warmup: int = 1):
@@ -27,3 +33,13 @@ def time_fn(fn, *args, reps: int = 3, warmup: int = 1):
 
 def row(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.0f},{derived}")
+    _RECORDS.append({"name": name, "us_per_call": round(seconds * 1e6),
+                     "derived": derived})
+
+
+def drain_records() -> List[Dict]:
+    """Rows recorded since the last drain (the driver calls this after
+    each bench module to build its JSON perf record)."""
+    out = list(_RECORDS)
+    _RECORDS.clear()
+    return out

@@ -1,9 +1,15 @@
 """Benchmark driver: one module per paper table/figure. Prints
-``name,us_per_call,derived`` CSV. Roofline terms come from the dry-run
-(launch.dryrun → EXPERIMENTS.md), not from here.
+``name,us_per_call,derived`` CSV and writes one machine-readable
+``BENCH_<name>.json`` perf record per bench module (rows + status), so
+the performance trajectory across PRs can be diffed by tooling.
+Roofline terms come from the dry-run (launch.dryrun → EXPERIMENTS.md),
+not from here.
 """
 from __future__ import annotations
 
+import json
+import os
+import platform
 import sys
 import traceback
 
@@ -12,21 +18,38 @@ def main() -> None:
     from benchmarks import (
         bench_delta_sweep,
         bench_gamemap,
+        bench_multisource,
         bench_preprocess,
         bench_rmat,
         bench_scaling,
         bench_smallworld,
     )
+    from benchmarks.common import drain_records
 
+    out_dir = os.environ.get("BENCH_OUT_DIR", ".")
     print("name,us_per_call,derived")
     failed = []
     for mod in (bench_smallworld, bench_delta_sweep, bench_scaling,
-                bench_preprocess, bench_rmat, bench_gamemap):
+                bench_preprocess, bench_rmat, bench_gamemap,
+                bench_multisource):
+        name = mod.__name__.rsplit(".", 1)[-1].removeprefix("bench_")
+        status = "ok"
         try:
             mod.main()
         except Exception:
             failed.append(mod.__name__)
+            status = "failed"
             traceback.print_exc()
+        record = {
+            "bench": name,
+            "status": status,
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+            "rows": drain_records(),
+        }
+        path = os.path.join(out_dir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
     if failed:
         print(f"FAILED: {failed}", file=sys.stderr)
         sys.exit(1)

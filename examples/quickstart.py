@@ -31,3 +31,9 @@ while pred[path[-1]] >= 0:
     path.append(int(pred[path[-1]]))
 print(f"farthest vertex {far} at distance {dist[far]}, "
       f"path length {len(path)} hops")
+
+# batched multi-source solve: one program for a whole batch of sources
+many = solver.solve_many([0, 1, 2, 3])
+assert np.array_equal(np.asarray(many.dist[0]), dist)
+print(f"solve_many: batch of {many.dist.shape[0]} sources, "
+      f"{[int(o) for o in many.outer_iters]} buckets each")

@@ -86,7 +86,8 @@ def _mem_analysis_dict(compiled) -> dict:
 def analyze(compiled, *, arch: str, shape: str, mesh_name: str,
             n_devices: int, model_flops: float, hw: dict = V5E,
             note: str = "") -> RooflineReport:
-    cost = compiled.cost_analysis() or {}
+    from repro.compat import cost_analysis_dict
+    cost = cost_analysis_dict(compiled)
     flops_dev = float(cost.get("flops", 0.0))
     bytes_dev = float(cost.get("bytes accessed", 0.0))
     hlo = compiled.as_text()

@@ -1,10 +1,19 @@
 """Core: the paper's contribution — parallel Δ-stepping SSSP in JAX."""
+from repro.core.backends import (
+    EdgeBackend,
+    EllBackend,
+    GridPallasBackend,
+    PallasEllBackend,
+    RelaxBackend,
+    edge_sweep,
+    make_backend,
+    scan_bucket,
+)
 from repro.core.delta_stepping import (
     DeltaConfig,
     DeltaSteppingSolver,
     SSSPResult,
     delta_stepping,
-    edge_sweep,
     pred_argmin,
 )
 from repro.core.ref import bellman_ford, dijkstra, validate_pred_tree
@@ -16,6 +25,13 @@ __all__ = [
     "delta_stepping",
     "edge_sweep",
     "pred_argmin",
+    "RelaxBackend",
+    "EdgeBackend",
+    "EllBackend",
+    "PallasEllBackend",
+    "GridPallasBackend",
+    "make_backend",
+    "scan_bucket",
     "dijkstra",
     "bellman_ford",
     "validate_pred_tree",

@@ -1,0 +1,332 @@
+"""Pluggable relaxation backends for the unified Δ-stepping driver.
+
+DESIGN.md §3: the paper's three inner mechanisms — request generation
+(light/heavy split), relaxation, and the dense bucket scan (C1) — are
+isolated behind the ``RelaxBackend`` protocol so a single generic
+outer/inner loop driver (``core.delta_stepping``) hosts every strategy:
+
+* ``edge``   — edge-centric |E| sweep (jnp scatter-min), zero
+  preprocessing; the light mask is evaluated on the fly.
+* ``ell``    — frontier-compacted expansion of light/heavy ELL blocks
+  (jnp); work scales with |frontier|·max_deg.
+* ``pallas`` — the same ELL expansion through the ``kernels/ell_relax``
+  Pallas kernel with bucket bookkeeping fused by ``kernels/bucket_scan``;
+  on game-map (occupancy-grid) instances the relaxation is instead the
+  ``kernels/grid_relax`` min-plus stencil.
+
+A backend provides two traced operations over solver state:
+
+  ``sweep(tent, mask, bucket_i, light=, packed=)`` → ``(tent', overflow)``
+      one relaxation sweep from the masked vertex set (the current
+      frontier for light passes, the settled set S for the heavy pass);
+  ``scan(dist, explored, bucket_i)`` → ``(frontier, any, next_bucket)``
+      the fused dense-bucket scan.
+
+plus host-side preprocessing in its ``build`` classmethod (CSR
+conversion, light/heavy split, ELL padding). Backends are registered
+pytrees: their operand arrays are jit *arguments*, not baked constants,
+so solvers over same-shaped graphs share compile cache entries.
+
+Sweeps are pure scatter-min dataflow, so the driver can ``vmap`` them
+over a batch of sources (``supports_vmap``); the Pallas-backed ones run
+the batch under ``lax.map`` instead (``pallas_call`` with scalar-prefetch
+grids has no batching rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack as packing
+from repro.graphs.structures import (
+    COOGraph,
+    ELLGraph,
+    INF32,
+    coo_to_csr,
+    csr_to_ell,
+    light_heavy_split,
+)
+from repro.kernels.bucket_scan import bucket_scan
+from repro.kernels.ell_relax import ell_relax
+from repro.kernels.grid_relax import grid_relax
+
+_IMAX = jnp.int32(2**31 - 1)
+
+
+# ---------------------------------------------------------------------------
+# value-word helpers: every backend is generic over 'plain int32 distance'
+# vs 'packed int64 (distance, predecessor)' words (paper C3, pack.py).
+# ---------------------------------------------------------------------------
+
+def init_tent(n: int, source, packed: bool):
+    if packed:
+        tent = jnp.full((n,), packing.INF_PACKED, dtype=jnp.int64)
+        src_word = packing.pack(jnp.zeros((), jnp.int32),
+                                jnp.asarray(source, jnp.int32))
+        return tent.at[source].set(src_word)
+    return jnp.full((n,), INF32, jnp.int32).at[source].set(0)
+
+
+def dist_of(tent, packed: bool):
+    return packing.unpack_dist(tent) if packed else tent
+
+
+def candidate_words(cand_d, src_ids, ok, packed: bool):
+    if packed:
+        word = packing.pack(cand_d, src_ids)
+        return jnp.where(ok, word, packing.INF_PACKED)
+    return jnp.where(ok, cand_d, INF32)
+
+
+# ---------------------------------------------------------------------------
+# shared primitive ops (also consumed by core.distributed)
+# ---------------------------------------------------------------------------
+
+def scan_bucket(dist, explored, bucket_i, *, delta: int):
+    """Fused dense-bucket scan (paper C1): the frontier mask of bucket
+    ``bucket_i``, its any-reduce, and the next non-empty bucket index —
+    pure-jnp twin of the ``kernels/bucket_scan`` Pallas kernel."""
+    fin = dist < INF32
+    b = jnp.where(fin, dist // delta, _IMAX)
+    frontier = fin & (b == bucket_i) & (dist < explored)
+    nxt = jnp.where(b > bucket_i, b, _IMAX).min()
+    return frontier, frontier.any(), nxt
+
+
+def edge_candidates(d_src, f_src, w, *, delta: int, light: bool):
+    """Candidate distances of one edge-array relaxation and the C4 early
+    mask (frontier membership + phase; the ``cand < tent[dst]`` filter is
+    the caller's, since only it holds the destination gather)."""
+    active = f_src & (d_src < INF32)
+    cand = jnp.where(active, d_src, 0) + jnp.where(active, w, 0)
+    phase = (w <= delta) if light else (w > delta)
+    return cand, active & phase
+
+
+def edge_sweep(tent, frontier, src, dst, w, *, delta: int, light: bool,
+               packed: bool):
+    """One relaxation sweep over an edge array, masked by frontier[src]
+    and the light/heavy phase. Padding edges may carry src == n (sentinel):
+    out-of-range gathers are filled inactive, out-of-range scatters drop —
+    the TPU version of the paper's 'benign garbage writes' argument."""
+    d = dist_of(tent, packed)
+    f = jnp.take(frontier, src, mode="fill", fill_value=False)
+    d_src = jnp.take(d, src, mode="fill", fill_value=INF32)
+    cand, ok = edge_candidates(d_src, f, w, delta=delta, light=light)
+    d_dst = jnp.take(d, dst, mode="fill", fill_value=INF32)
+    ok = ok & (cand < d_dst)              # C4: early filter before scatter
+    words = candidate_words(cand, src, ok, packed)
+    return tent.at[dst].min(words, mode="drop")
+
+
+def ell_sweep(tent, fidx, nbr, w_ell, *, n: int, packed: bool):
+    """Expand compacted frontier rows of an ELL adjacency block.
+    ``fidx`` int32[cap] with sentinel value n for padding slots."""
+    d = dist_of(tent, packed)
+    rows_n = nbr[fidx]                      # (cap, D); row n is all-sentinel
+    rows_w = w_ell[fidx]
+    d_f = jnp.take(d, fidx, mode="fill", fill_value=INF32)
+    valid = (rows_n < n) & (rows_w < INF32) & (d_f[:, None] < INF32)
+    cand = (jnp.where(valid, d_f[:, None], 0)
+            + jnp.where(valid, rows_w, 0))
+    d_dst = jnp.take(d, rows_n, mode="fill", fill_value=INF32)
+    ok = valid & (cand < d_dst)
+    src_ids = jnp.broadcast_to(fidx[:, None], rows_n.shape)
+    words = candidate_words(cand, src_ids, ok, packed)
+    return tent.at[rows_n.ravel()].min(words.ravel(), mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+class RelaxBackend:
+    """Strategy protocol consumed by the unified driver (methods only;
+    concrete backends are frozen pytree dataclasses)."""
+
+    supports_vmap = True
+    delta: int
+
+    def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
+        raise NotImplementedError
+
+    def scan(self, dist, explored, bucket_i):
+        return scan_bucket(dist, explored, bucket_i, delta=self.delta)
+
+
+def _static():
+    return dataclasses.field(metadata=dict(static=True))
+
+
+class _FrontierCompactMixin:
+    """Shared ELL-strategy frontier compaction: masked vertex set → a
+    fixed-capacity index buffer (sentinel ``n``) plus the overflow flag.
+    Consumers declare static fields ``n`` and ``cap``."""
+
+    def compact(self, mask):
+        idx = jnp.nonzero(mask, size=self.cap,
+                          fill_value=self.n)[0].astype(jnp.int32)
+        return idx, mask.sum() > self.cap
+
+
+class _PallasScanMixin:
+    """Bucket bookkeeping on the fused ``kernels/bucket_scan`` Pallas
+    kernel. Consumers declare static fields ``delta`` and ``interpret``."""
+
+    def scan(self, dist, explored, bucket_i):
+        return bucket_scan(dist, explored, bucket_i, delta=self.delta,
+                           backend="pallas", interpret=self.interpret)
+
+
+def _ell_blocks(graph: COOGraph, delta: int):
+    """Host-side preprocessing shared by the ELL strategies: CSR convert,
+    light/heavy split (paper Alg. 1 lines 3–5), ELL pad."""
+    csr = coo_to_csr(graph)
+    light, heavy = light_heavy_split(csr, delta)
+    return csr_to_ell(light), csr_to_ell(heavy)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeBackend(RelaxBackend):
+    """Edge-centric strategy: every sweep touches all |E| edges, masked
+    by frontier membership of their source (fixed shapes, no compaction)."""
+
+    src: jax.Array
+    dst: jax.Array
+    w: jax.Array
+    delta: int = _static()
+
+    @classmethod
+    def build(cls, graph: COOGraph, cfg) -> "EdgeBackend":
+        return cls(graph.src, graph.dst, graph.w, cfg.delta)
+
+    def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
+        tent = edge_sweep(tent, mask, self.src, self.dst, self.w,
+                          delta=self.delta, light=light, packed=packed)
+        return tent, jnp.zeros((), bool)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EllBackend(_FrontierCompactMixin, RelaxBackend):
+    """Frontier-centric strategy: compacts the masked set into a
+    fixed-capacity index buffer and expands light/heavy ELL rows
+    (preprocessed split, paper Alg. 1 lines 3–5)."""
+
+    light: ELLGraph
+    heavy: ELLGraph
+    delta: int = _static()
+    n: int = _static()
+    cap: int = _static()
+
+    @classmethod
+    def build(cls, graph: COOGraph, cfg) -> "EllBackend":
+        light, heavy = _ell_blocks(graph, cfg.delta)
+        return cls(light, heavy, cfg.delta, graph.n_nodes,
+                   cfg.frontier_cap or graph.n_nodes)
+
+    def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
+        fidx, over = self.compact(mask)
+        ell = self.light if light else self.heavy
+        tent = ell_sweep(tent, fidx, ell.nbr, ell.w, n=self.n, packed=packed)
+        return tent, over
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PallasEllBackend(_FrontierCompactMixin, _PallasScanMixin,
+                       RelaxBackend):
+    """ELL strategy with the hot loops on Pallas TPU kernels: candidate
+    generation by ``kernels/ell_relax`` (scalar-prefetch row gather) and
+    the three bucket scans fused by ``kernels/bucket_scan``. The
+    scatter-min merge stays in XLA (C2), so packed (dist, pred) words
+    still work — the kernel only ever sees int32 distances."""
+
+    supports_vmap = False
+
+    light: ELLGraph
+    heavy: ELLGraph
+    delta: int = _static()
+    n: int = _static()
+    cap: int = _static()
+    interpret: bool = _static()
+
+    @classmethod
+    def build(cls, graph: COOGraph, cfg) -> "PallasEllBackend":
+        light, heavy = _ell_blocks(graph, cfg.delta)
+        return cls(light, heavy, cfg.delta, graph.n_nodes,
+                   cfg.frontier_cap or graph.n_nodes, cfg.interpret)
+
+    def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
+        fidx, over = self.compact(mask)
+        ell = self.light if light else self.heavy
+        d = dist_of(tent, packed)
+        cand = ell_relax(fidx, d, ell.w, backend="pallas",
+                         interpret=self.interpret)          # (cap, D)
+        rows_n = ell.nbr[fidx]
+        d_dst = jnp.take(d, rows_n, mode="fill", fill_value=INF32)
+        ok = cand < d_dst                 # C4 filter on kernel candidates
+        src_ids = jnp.broadcast_to(fidx[:, None], rows_n.shape)
+        words = candidate_words(cand, src_ids, ok, packed)
+        tent = tent.at[rows_n.ravel()].min(words.ravel(), mode="drop")
+        return tent, over
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GridPallasBackend(_PallasScanMixin, RelaxBackend):
+    """Game-map strategy (paper §4 'Game Maps'): the graph is an
+    occupancy grid, so relaxation is the ``kernels/grid_relax`` masked
+    min-plus stencil — no adjacency materialization at all. The stencil
+    recomputes bucket membership from ``tent`` in-kernel, so the driver's
+    mask argument is advisory; re-relaxing settled cells is idempotent
+    (the paper's redundant-work trade). int32 distances only
+    (``pred_mode='packed'`` is rejected at build time)."""
+
+    supports_vmap = False
+
+    free: jax.Array                       # bool[H, W] occupancy mask
+    delta: int = _static()
+    shape: Tuple[int, int] = _static()
+    costs: Tuple[int, int] = _static()    # (straight, diagonal)
+    interpret: bool = _static()
+
+    @classmethod
+    def build(cls, graph: COOGraph, cfg, free_mask) -> "GridPallasBackend":
+        free = jnp.asarray(free_mask, bool)
+        if free.ndim != 2 or free.size != graph.n_nodes:
+            raise ValueError(
+                f"free_mask shape {free.shape} does not cover the "
+                f"{graph.n_nodes}-vertex graph")
+        return cls(free, cfg.delta, tuple(free.shape),
+                   tuple(cfg.grid_costs), cfg.interpret)
+
+    def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
+        h, w = self.shape
+        out = grid_relax(tent.reshape(h, w), self.free, bucket_i,
+                         delta=self.delta, cost_straight=self.costs[0],
+                         cost_diag=self.costs[1], light=light,
+                         backend="pallas", interpret=self.interpret)
+        return out.reshape(-1), jnp.zeros((), bool)
+
+
+def make_backend(graph: COOGraph, cfg, free_mask=None) -> RelaxBackend:
+    """Route a (graph, config) pair to its backend. ``free_mask`` marks
+    the game-map graph class: under ``strategy='pallas'`` it selects the
+    grid-stencil kernel instead of the ELL kernels."""
+    if cfg.strategy == "edge":
+        return EdgeBackend.build(graph, cfg)
+    if cfg.strategy == "ell":
+        return EllBackend.build(graph, cfg)
+    assert cfg.strategy == "pallas", cfg.strategy
+    if free_mask is not None:
+        if cfg.pred_mode == "packed":
+            raise ValueError(
+                "grid-stencil pallas backend carries int32 distances only; "
+                "use pred_mode='argmin' (post-hoc tree recovery)")
+        return GridPallasBackend.build(graph, cfg, free_mask)
+    return PallasEllBackend.build(graph, cfg)

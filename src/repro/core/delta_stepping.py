@@ -1,4 +1,4 @@
-"""Single-device Δ-stepping SSSP engine (paper Alg. 1/2, DESIGN.md §2).
+"""Single-device Δ-stepping SSSP engine (paper Alg. 1/2, DESIGN.md §2–3).
 
 The paper's shared-memory mechanisms map onto JAX dataflow:
 
@@ -13,15 +13,18 @@ The paper's shared-memory mechanisms map onto JAX dataflow:
 * read/write decoupling (C5) → gather phase and scatter phase are
   separate XLA ops by construction.
 
-Two relaxation strategies (config.strategy):
+One generic outer/inner loop driver hosts every relaxation strategy via
+the ``RelaxBackend`` protocol (core.backends): ``edge`` (edge-centric
+|E| sweeps), ``ell`` (frontier-compacted ELL expansion) and ``pallas``
+(the ELL expansion and bucket scan on the Pallas TPU kernels under
+``kernels/``; game-map instances use the grid stencil kernel).
 
-* ``edge``: edge-centric — every inner iteration sweeps all |E| edges,
-  masked by frontier membership of their source. Fixed shapes, no
-  compaction; optimal for the paper's low-diameter graph classes.
-* ``ell``: frontier-centric — compacts the frontier into a fixed-capacity
-  index buffer and expands ELL-padded light/heavy adjacency rows
-  (preprocessed split, paper Alg. 1 lines 3–5). Work scales with
-  |frontier|·max_deg instead of |E|.
+Batched multi-source solving (``DeltaSteppingSolver.solve_many``) vmaps
+the driver over a batch of sources: the carried state (tent / explored /
+frontier, bucket index, iteration counters) gains a leading batch axis,
+the while-loops run until every lane converges, and converged lanes are
+frozen by the batching rule's select — so per-source counters and
+results are bitwise identical to per-source ``solve``.
 
 Weights must be non-negative int32; ``pred_mode='argmin'`` additionally
 assumes weights >= 1 (zero-weight ties could close a predecessor cycle;
@@ -38,15 +41,14 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import pack as packing
-from repro.graphs.structures import (
-    COOGraph,
-    CSRGraph,
-    ELLGraph,
-    INF32,
-    coo_to_csr,
-    csr_to_ell,
-    light_heavy_split,
+from repro.core.backends import (
+    RelaxBackend,
+    dist_of as _dist_of,
+    edge_sweep,
+    init_tent as _init_tent,
+    make_backend,
 )
+from repro.graphs.structures import COOGraph, INF32
 
 _IMAX = jnp.int32(2**31 - 1)
 
@@ -56,20 +58,27 @@ class DeltaConfig:
     """Configuration of the Δ-stepping engine.
 
     delta        — bucket width Δ (paper's tuning parameter, Fig. 1).
-    strategy     — 'edge' | 'ell' relaxation strategy (see module doc).
+    strategy     — 'edge' | 'ell' | 'pallas' relaxation backend
+                   (see module doc / DESIGN.md §3).
     pred_mode    — 'none' | 'argmin' | 'packed' predecessor tracking.
-    frontier_cap — 'ell' only: static capacity of the compacted frontier
-                   (defaults to |V|; smaller saves work if an upper bound
-                   on per-bucket frontier size is known).
+    frontier_cap — 'ell'/'pallas' only: static capacity of the compacted
+                   frontier (defaults to |V|; smaller saves work if an
+                   upper bound on per-bucket frontier size is known —
+                   the ``overflow`` result flag reports violations).
+    interpret    — 'pallas' only: run kernels in interpret mode (CPU).
+    grid_costs   — 'pallas' on game maps: (straight, diagonal) move
+                   costs of the occupancy-grid stencil (paper §4).
     """
 
     delta: int = 10
     strategy: str = "edge"
     pred_mode: str = "argmin"
     frontier_cap: Optional[int] = None
+    interpret: bool = False
+    grid_costs: Tuple[int, int] = (10, 14)
 
     def __post_init__(self):
-        if self.strategy not in ("edge", "ell"):
+        if self.strategy not in ("edge", "ell", "pallas"):
             raise ValueError(f"unknown strategy {self.strategy!r}")
         if self.pred_mode not in ("none", "argmin", "packed"):
             raise ValueError(f"unknown pred_mode {self.pred_mode!r}")
@@ -78,189 +87,70 @@ class DeltaConfig:
 
 
 class SSSPResult(NamedTuple):
+    """Solve result; ``solve_many`` returns the same tuple with a leading
+    batch axis on every field."""
+
     dist: jax.Array          # int32[n], INF32 = unreachable
     pred: jax.Array          # int32[n], -1 = source/unreachable
     outer_iters: jax.Array   # int32: number of buckets processed
     inner_iters: jax.Array   # int32: total light-phase sweeps
-    overflow: jax.Array      # bool: 'ell' frontier capacity exceeded
+    overflow: jax.Array      # bool: compacted frontier capacity exceeded
 
 
 def _require_x64():
     if jnp.zeros((), jnp.int64).dtype != jnp.int64:
         raise RuntimeError(
             "pred_mode='packed' packs (dist, pred) into int64 and requires "
-            "x64 (wrap the call in jax.experimental.enable_x64())."
+            "x64 (wrap the call in repro.compat.enable_x64())."
         )
 
 
 # ---------------------------------------------------------------------------
-# value-word helpers: the engine is generic over 'plain int32 distance' vs
-# 'packed int64 (distance, predecessor)' words.
+# the unified loop driver — generic over RelaxBackend and vmap-batchable
 # ---------------------------------------------------------------------------
 
-def _init_tent(n: int, source, packed: bool):
-    if packed:
-        tent = jnp.full((n,), packing.INF_PACKED, dtype=jnp.int64)
-        src_word = packing.pack(jnp.zeros((), jnp.int32),
-                                jnp.asarray(source, jnp.int32))
-        return tent.at[source].set(src_word)
-    return jnp.full((n,), INF32, jnp.int32).at[source].set(0)
-
-
-def _dist_of(tent, packed: bool):
-    return packing.unpack_dist(tent) if packed else tent
-
-
-def _candidate_words(cand_d, src_ids, ok, packed: bool):
-    if packed:
-        word = packing.pack(cand_d, src_ids)
-        return jnp.where(ok, word, packing.INF_PACKED)
-    return jnp.where(ok, cand_d, INF32)
-
-
-# ---------------------------------------------------------------------------
-# edge-centric sweep (shared with the distributed engine)
-# ---------------------------------------------------------------------------
-
-def edge_sweep(tent, frontier, src, dst, w, *, delta: int, light: bool,
-               packed: bool):
-    """One relaxation sweep over an edge array, masked by frontier[src]
-    and the light/heavy phase. Padding edges may carry src == n (sentinel):
-    out-of-range gathers are filled inactive, out-of-range scatters drop —
-    the TPU version of the paper's 'benign garbage writes' argument."""
-    d = _dist_of(tent, packed)
-    f = jnp.take(frontier, src, mode="fill", fill_value=False)
-    d_src = jnp.take(d, src, mode="fill", fill_value=INF32)
-    active = f & (d_src < INF32)
-    cand = jnp.where(active, d_src, 0) + jnp.where(active, w, 0)
-    phase = (w <= delta) if light else (w > delta)
-    d_dst = jnp.take(d, dst, mode="fill", fill_value=INF32)
-    ok = active & phase & (cand < d_dst)   # C4: early filter before scatter
-    words = _candidate_words(cand, src, ok, packed)
-    return tent.at[dst].min(words, mode="drop")
-
-
-def _frontier_of(tent, explored, i, *, delta: int, packed: bool):
-    d = _dist_of(tent, packed)
-    return (d < INF32) & (d // delta == i) & (d < explored)
-
-
-def _next_bucket(tent, i, *, delta: int, packed: bool):
-    d = _dist_of(tent, packed)
-    b = jnp.where(d < INF32, d // delta, _IMAX)
-    b = jnp.where(b > i, b, _IMAX)
-    return b.min()
-
-
-@partial(jax.jit, static_argnames=("n", "delta", "packed"))
-def _solve_edge(src, dst, w, source, *, n: int, delta: int, packed: bool):
+def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool):
+    """Outer/inner Δ-stepping loop (paper Alg. 1) over one backend.
+    Returns ``(tent, outer_iters, inner_iters, overflow)``."""
     tent0 = _init_tent(n, source, packed)
     explored0 = jnp.full((n,), INF32, jnp.int32)
 
-    def light_phase(tent, explored, i, inner):
+    def scan(tent, explored, i):
+        return backend.scan(_dist_of(tent, packed), explored, i)
+
+    def light_phase(tent, explored, i, inner, over):
         in_s0 = jnp.zeros((n,), bool)
-        f0 = _frontier_of(tent, explored, i, delta=delta, packed=packed)
+        f0, go0, _ = scan(tent, explored, i)
 
         def cond(c):
-            return c[3].any()
+            return c[6]
 
         def body(c):
-            tent, explored, in_s, f, inner = c
+            tent, explored, in_s, inner, over, f, _ = c
             d = _dist_of(tent, packed)
             explored = jnp.where(f, d, explored)   # paper: move into S
             in_s = in_s | f
-            tent = edge_sweep(tent, f, src, dst, w, delta=delta, light=True,
-                              packed=packed)
-            f = _frontier_of(tent, explored, i, delta=delta, packed=packed)
-            return (tent, explored, in_s, f, inner + 1)
+            tent, o = backend.sweep(tent, f, i, light=True, packed=packed)
+            f, go, _ = scan(tent, explored, i)
+            return (tent, explored, in_s, inner + 1, over | o, f, go)
 
-        return lax.while_loop(cond, body, (tent, explored, in_s0, f0, inner))
+        tent, explored, in_s, inner, over, _, _ = lax.while_loop(
+            cond, body, (tent, explored, in_s0, inner, over, f0, go0))
+        return tent, explored, in_s, inner, over
 
     def outer_body(c):
-        tent, explored, i, outer, inner = c
-        tent, explored, in_s, _, inner = light_phase(tent, explored, i, inner)
+        tent, explored, i, outer, inner, over = c
+        tent, explored, in_s, inner, over = light_phase(
+            tent, explored, i, inner, over)
         # heavy pass from S (paper Alg. 1 lines 19-20)
-        tent = edge_sweep(tent, in_s, src, dst, w, delta=delta, light=False,
-                          packed=packed)
-        i = _next_bucket(tent, i, delta=delta, packed=packed)
-        return (tent, explored, i, outer + 1, inner)
+        tent, o = backend.sweep(tent, in_s, i, light=False, packed=packed)
+        _, _, nxt = scan(tent, explored, i)
+        return (tent, explored, nxt, outer + 1, inner, over | o)
 
     def outer_cond(c):
         return c[2] < _IMAX
 
     i0 = jnp.zeros((), jnp.int32)  # relax(s, 0) puts the source in B_0
-    tent, _, _, outer, inner = lax.while_loop(
-        outer_cond, outer_body,
-        (tent0, explored0, i0, jnp.zeros((), jnp.int32),
-         jnp.zeros((), jnp.int32)))
-    return tent, outer, inner
-
-
-# ---------------------------------------------------------------------------
-# frontier-centric (ELL) sweep
-# ---------------------------------------------------------------------------
-
-def ell_sweep(tent, fidx, nbr, w_ell, *, n: int, packed: bool):
-    """Expand compacted frontier rows of an ELL adjacency block.
-    ``fidx`` int32[cap] with sentinel value n for padding slots."""
-    d = _dist_of(tent, packed)
-    rows_n = nbr[fidx]                      # (cap, D); row n is all-sentinel
-    rows_w = w_ell[fidx]
-    d_f = jnp.take(d, fidx, mode="fill", fill_value=INF32)
-    valid = (rows_n < n) & (rows_w < INF32) & (d_f[:, None] < INF32)
-    cand = (jnp.where(valid, d_f[:, None], 0)
-            + jnp.where(valid, rows_w, 0))
-    d_dst = jnp.take(d, rows_n, mode="fill", fill_value=INF32)
-    ok = valid & (cand < d_dst)
-    src_ids = jnp.broadcast_to(fidx[:, None], rows_n.shape)
-    words = _candidate_words(cand, src_ids, ok, packed)
-    return tent.at[rows_n.ravel()].min(words.ravel(), mode="drop")
-
-
-@partial(jax.jit, static_argnames=("n", "delta", "packed", "cap"))
-def _solve_ell(lnbr, lw, hnbr, hw, source, *, n: int, delta: int,
-               packed: bool, cap: int):
-    tent0 = _init_tent(n, source, packed)
-    explored0 = jnp.full((n,), INF32, jnp.int32)
-
-    def compact(mask):
-        idx = jnp.nonzero(mask, size=cap, fill_value=n)[0].astype(jnp.int32)
-        over = mask.sum() > cap
-        return idx, over
-
-    def light_phase(tent, explored, i, inner, over):
-        in_s0 = jnp.zeros((n,), bool)
-        f0 = _frontier_of(tent, explored, i, delta=delta, packed=packed)
-
-        def cond(c):
-            return c[3].any()
-
-        def body(c):
-            tent, explored, in_s, f, inner, over = c
-            d = _dist_of(tent, packed)
-            explored = jnp.where(f, d, explored)
-            in_s = in_s | f
-            fidx, o = compact(f)
-            tent = ell_sweep(tent, fidx, lnbr, lw, n=n, packed=packed)
-            f = _frontier_of(tent, explored, i, delta=delta, packed=packed)
-            return (tent, explored, in_s, f, inner + 1, over | o)
-
-        return lax.while_loop(cond, body,
-                              (tent, explored, in_s0, f0, inner, over))
-
-    def outer_body(c):
-        tent, explored, i, outer, inner, over = c
-        tent, explored, in_s, _, inner, over = light_phase(
-            tent, explored, i, inner, over)
-        sidx, o = compact(in_s)
-        tent = ell_sweep(tent, sidx, hnbr, hw, n=n, packed=packed)
-        i = _next_bucket(tent, i, delta=delta, packed=packed)
-        return (tent, explored, i, outer + 1, inner, over | o)
-
-    def outer_cond(c):
-        return c[2] < _IMAX
-
-    i0 = jnp.zeros((), jnp.int32)
     tent, _, _, outer, inner, over = lax.while_loop(
         outer_cond, outer_body,
         (tent0, explored0, i0, jnp.zeros((), jnp.int32),
@@ -307,36 +197,61 @@ def _finish_pred(tent, coo: COOGraph, source, cfg: DeltaConfig):
 
 class DeltaSteppingSolver:
     """Preprocesses a graph once (paper's parallel preprocessing stage) and
-    solves SSSP from arbitrary sources with a single jitted program."""
+    solves SSSP from arbitrary sources — singly (``solve``) or as a
+    batched multi-source program (``solve_many``, the regime of the
+    paper's betweenness-centrality citation) — with jitted programs
+    shared across calls.
 
-    def __init__(self, graph: COOGraph, config: DeltaConfig = DeltaConfig()):
+    ``free_mask`` (bool[H, W]) marks the game-map graph class: together
+    with ``strategy='pallas'`` it routes relaxation to the grid-stencil
+    kernel (DESIGN.md §3)."""
+
+    def __init__(self, graph: COOGraph, config: DeltaConfig = DeltaConfig(),
+                 *, free_mask=None):
         self.config = config
         self.graph = graph
         if config.pred_mode == "packed":
             _require_x64()
-        if config.strategy == "ell":
-            csr = coo_to_csr(graph)
-            light, heavy = light_heavy_split(csr, config.delta)
-            self._ell_light = csr_to_ell(light)
-            self._ell_heavy = csr_to_ell(heavy)
-            self._cap = config.frontier_cap or graph.n_nodes
+        self.backend = make_backend(graph, config, free_mask=free_mask)
+        packed = config.pred_mode == "packed"
+        run = partial(_run_backend, n=graph.n_nodes, packed=packed)
+        # the backend is a pytree jit *argument*: solvers over same-shaped
+        # graphs hit the same compile cache entry.
+        self._run1 = jax.jit(lambda b, s: run(b, s))
+        if self.backend.supports_vmap:
+            self._run_many = jax.jit(
+                lambda b, ss: jax.vmap(lambda s: run(b, s))(ss))
+        else:  # pallas_call has no batching rule: sequential in-program map
+            self._run_many = jax.jit(
+                lambda b, ss: lax.map(lambda s: run(b, s), ss))
 
     def solve(self, source: int) -> SSSPResult:
+        src_arr = jnp.asarray(source, jnp.int32)
+        tent, outer, inner, over = self._run1(self.backend, src_arr)
+        dist, pred = _finish_pred(tent, self.graph, src_arr, self.config)
+        return SSSPResult(dist, pred, outer, inner, over)
+
+    def solve_many(self, sources) -> SSSPResult:
+        """Batched multi-source solve on one device. Returns an
+        ``SSSPResult`` whose fields carry a leading batch axis; every
+        lane is bitwise identical to the corresponding ``solve``."""
+        srcs = jnp.asarray(sources, jnp.int32)
+        if srcs.ndim != 1:
+            raise ValueError("sources must be a 1-D array of vertex ids")
         cfg = self.config
         packed = cfg.pred_mode == "packed"
-        src_arr = jnp.asarray(source, jnp.int32)
-        if cfg.strategy == "edge":
-            tent, outer, inner = _solve_edge(
-                self.graph.src, self.graph.dst, self.graph.w, src_arr,
-                n=self.graph.n_nodes, delta=cfg.delta, packed=packed)
-            over = jnp.zeros((), bool)
+        tent, outer, inner, over = self._run_many(self.backend, srcs)
+        dist = _dist_of(tent, packed)
+        if cfg.pred_mode == "none":
+            pred = jnp.full(dist.shape, -1, jnp.int32)
+        elif packed:
+            pred = packing.unpack_pred(tent)
+            pred = jnp.where(dist < INF32, pred, -1)
+            pred = pred.at[jnp.arange(srcs.shape[0]), srcs].set(-1)
         else:
-            tent, outer, inner, over = _solve_ell(
-                self._ell_light.nbr, self._ell_light.w,
-                self._ell_heavy.nbr, self._ell_heavy.w, src_arr,
-                n=self.graph.n_nodes, delta=cfg.delta, packed=packed,
-                cap=self._cap)
-        dist, pred = _finish_pred(tent, self.graph, src_arr, cfg)
+            g = self.graph
+            pred = jax.vmap(lambda d, s: pred_argmin(
+                d, g.src, g.dst, g.w, s, n=g.n_nodes))(dist, srcs)
         return SSSPResult(dist, pred, outer, inner, over)
 
 

@@ -11,6 +11,12 @@ The paper's OpenMP parallelization maps to SPMD:
   synchronization for redundant relaxations) → ``local_steps > 1``:
   devices run k local light sweeps between collectives.
 
+The per-shard compute is built from the same primitives as the
+single-device backends (``core.backends``): ``edge_candidates`` for
+request generation and ``scan_bucket`` for the fused frontier /
+any-frontier / next-bucket scan, with collectives layered on top
+(pmax of the any-flag, pmin of the next bucket).
+
 Two combine schedules (the §Perf hillclimb axis):
 
 * ``allreduce``      — tent replicated on every device; one
@@ -23,7 +29,9 @@ Two combine schedules (the §Perf hillclimb axis):
   |V|/P per device.
 
 Independent SSSP sources are batched over the ``data`` (× ``pod``) axes —
-the multi-source regime of the paper's betweenness-centrality citation.
+the multi-source regime of the paper's betweenness-centrality citation
+(single-device batching without a mesh is
+``DeltaSteppingSolver.solve_many``).
 """
 from __future__ import annotations
 
@@ -37,7 +45,8 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.delta_stepping import _frontier_of, _next_bucket
+from repro.compat import shard_map
+from repro.core.backends import edge_candidates, scan_bucket
 from repro.graphs.partition import VertexPartition
 from repro.graphs.structures import INF32
 
@@ -74,13 +83,9 @@ def _local_sweep(tent_full_dist, frontier_flags_of_src, src_off, dst, w,
     edge sources via *local* indices ``src_off`` (padding rows gather INF
     through fill)."""
     d_src = jnp.take(tent_full_dist, src_off, mode="fill", fill_value=INF32)
-    f = frontier_flags_of_src
-    active = f & (d_src < INF32)
-    cand = jnp.where(active, d_src, 0) + jnp.where(active, w, 0)
-    phase = (w <= delta) if light else (w > delta)
-    ok = active & phase
-    words = jnp.where(ok, cand, INF32)
-    return buf.at[dst].min(words, mode="drop")
+    cand, ok = edge_candidates(d_src, frontier_flags_of_src, w,
+                               delta=delta, light=light)
+    return buf.at[dst].min(jnp.where(ok, cand, INF32), mode="drop")
 
 
 def build_solver_from_meta(*, n_nodes: int, shard_nodes: int, mesh: Mesh,
@@ -99,10 +104,6 @@ def build_solver_from_meta(*, n_nodes: int, shard_nodes: int, mesh: Mesh,
     delta = cfg.delta
     batch_spec = P(cfg.batch_axes)
     ax = cfg.model_axis
-
-    def frontier_of(dist_loc, explored_loc, i):
-        return ((dist_loc < INF32) & (dist_loc // delta == i)
-                & (dist_loc < explored_loc))
 
     def combine_min(buf, tent_loc):
         """buf int32[n_pad] of local candidates → merge into tent_loc."""
@@ -141,7 +142,7 @@ def build_solver_from_meta(*, n_nodes: int, shard_nodes: int, mesh: Mesh,
             work instead of synchronization (paper §4 'Delta')."""
             def one(k, carry):
                 tent, explored = carry
-                f = frontier_of(tent, explored, i)
+                f, _, _ = scan_bucket(tent, explored, i, delta=delta)
                 explored = jnp.where(f, tent, explored)
                 buf = jnp.full((n_pad,), INF32, jnp.int32)
                 f_src = jnp.take(f, src_off, mode="fill", fill_value=False)
@@ -157,8 +158,8 @@ def build_solver_from_meta(*, n_nodes: int, shard_nodes: int, mesh: Mesh,
 
         def light_phase(tent, explored, i, in_s, inner):
             def flag(t, e):
-                f = frontier_of(t, e, i)
-                return f, lax.pmax(f.any().astype(jnp.int32), ax) > 0
+                f, any_loc, _ = scan_bucket(t, e, i, delta=delta)
+                return f, lax.pmax(any_loc.astype(jnp.int32), ax) > 0
 
             f0, go0 = flag(tent, explored)
 
@@ -170,7 +171,7 @@ def build_solver_from_meta(*, n_nodes: int, shard_nodes: int, mesh: Mesh,
                 explored = jnp.where(f, tent, explored)
                 in_s = in_s | f
                 tent, explored = local_light_steps(tent, explored, i)
-                f2 = frontier_of(tent, explored, i)
+                f2, _, _ = scan_bucket(tent, explored, i, delta=delta)
                 tent = sweep_combine(tent, f2 | f, light=True)
                 f3, go = flag(tent, explored)
                 return (tent, explored, in_s, inner + 1, f3, go)
@@ -185,9 +186,8 @@ def build_solver_from_meta(*, n_nodes: int, shard_nodes: int, mesh: Mesh,
             tent, explored, in_s, inner = light_phase(
                 tent, explored, i, in_s, inner)
             tent = sweep_combine(tent, in_s, light=False)
-            b = jnp.where(tent < INF32, tent // delta, _IMAX)
-            b = jnp.where(b > i, b, _IMAX)
-            i = lax.pmin(b.min(), ax)
+            _, _, nxt = scan_bucket(tent, explored, i, delta=delta)
+            i = lax.pmin(nxt, ax)
             return (tent, explored, i, outer + 1, inner)
 
         def outer_cond(c):
@@ -208,7 +208,7 @@ def build_solver_from_meta(*, n_nodes: int, shard_nodes: int, mesh: Mesh,
         tent, outer, inner = solve(sources, src_e, dst_e, w_e, vstart)
         return tent, outer.max(keepdims=True), inner.max(keepdims=True)
 
-    mapped = jax.shard_map(
+    mapped = shard_map(
         shard_body,
         mesh=mesh,
         in_specs=(batch_spec, P(ax), P(ax), P(ax), P(ax)),

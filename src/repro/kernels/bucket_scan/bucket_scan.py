@@ -42,11 +42,12 @@ def bucket_scan_kernel(i_ref, tent_ref, explored_ref, frontier_ref,
 
     @pl.when(pid == 0)
     def _init():
-        any_ref[0, 0] = 0
-        next_ref[0, 0] = _IMAX
+        # explicit int32: under x64 a weak python int would store as int64
+        any_ref[0, 0] = jnp.int32(0)
+        next_ref[0, 0] = jnp.int32(_IMAX)
 
     any_ref[0, 0] = jnp.maximum(any_ref[0, 0], f.any().astype(jnp.int32))
-    nb = jnp.where(b > i, b, _IMAX).min()
+    nb = jnp.where(b > i, b, _IMAX).min().astype(jnp.int32)
     next_ref[0, 0] = jnp.minimum(next_ref[0, 0], nb)
 
 

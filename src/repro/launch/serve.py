@@ -1,7 +1,15 @@
-"""Serving launcher: batched-request demo over the slot server.
+"""Serving launcher: batched-request demos over the serve layer.
+
+LM decode over the slot server:
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \\
       --requests 8 --max-new 16
+
+Batched SSSP queries over the microbatching graph server (the unified
+engine's multi-source program):
+
+  PYTHONPATH=src python -m repro.launch.serve --sssp --nodes 20000 \\
+      --requests 32 --batch 8
 """
 from __future__ import annotations
 
@@ -9,17 +17,35 @@ import argparse
 import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=64)
-    args = ap.parse_args()
+def _serve_sssp(args):
+    import numpy as np
 
+    from repro.core import DeltaConfig
+    from repro.graphs import watts_strogatz
+    from repro.serve import SSSPQuery, SSSPServer
+
+    g = watts_strogatz(args.nodes, args.degree, 1e-2, seed=0)
+    srv = SSSPServer(g, DeltaConfig(delta=args.delta),
+                     batch_size=args.batch)
+    srv.submit(SSSPQuery(qid=-1, source=0))
+    srv.step()                                  # warm up / compile
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        # mix of full distance-vector and point-to-point queries
+        target = int(rng.integers(g.n_nodes)) if i % 2 else None
+        srv.submit(SSSPQuery(qid=i, source=int(rng.integers(g.n_nodes)),
+                             target=target))
+    t0 = time.perf_counter()
+    done = srv.run_to_completion()
+    dt = time.perf_counter() - t0
+    n_paths = sum(1 for q in done if q.path is not None)
+    print(f"[serve] answered {len(done)} SSSP queries ({n_paths} with "
+          f"paths) in {dt:.2f}s "
+          f"({len(done) / dt:.1f} qps, batch={args.batch}, "
+          f"|V|={g.n_nodes})")
+
+
+def _serve_lm(args):
     import jax
     import numpy as np
 
@@ -27,7 +53,7 @@ def main():
     from repro.models.transformer import init_lm
     from repro.serve import BatchServer, Request
 
-    assert family_of(args.arch) == "lm", "serve launcher is for LM archs"
+    assert family_of(args.arch) == "lm", "LM serving needs an lm arch"
     cfg = get_config(args.arch, smoke=args.smoke)
     params = init_lm(cfg, jax.random.key(0))
     srv = BatchServer(params, cfg, n_slots=args.slots, max_len=args.max_len,
@@ -45,6 +71,33 @@ def main():
     tokens = sum(len(r.generated) for r in done)
     print(f"[serve] completed {len(done)} requests, {tokens} tokens in "
           f"{dt:.2f}s ({tokens / dt:.1f} tok/s with {args.slots} slots)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=64)
+    # SSSP serving mode
+    ap.add_argument("--sssp", action="store_true",
+                    help="serve batched SSSP queries instead of LM decode")
+    ap.add_argument("--nodes", type=int, default=20_000)
+    ap.add_argument("--degree", type=int, default=12)
+    ap.add_argument("--delta", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="SSSP microbatch size (solve_many lanes)")
+    args = ap.parse_args()
+
+    if args.sssp:
+        _serve_sssp(args)
+    else:
+        if not args.arch:
+            ap.error("--arch is required for LM serving")
+        _serve_lm(args)
 
 
 if __name__ == "__main__":

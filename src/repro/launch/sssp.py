@@ -3,9 +3,14 @@
   PYTHONPATH=src python -m repro.launch.sssp --graph smallworld \\
       --nodes 100000 --degree 20 --delta 10 --sources 4 --verify
 
-Uses the single-device engine by default; ``--devices N`` (with
+Uses the single-device engine by default; ``--sources K`` with
+``--devices 0`` solves the K sources as one batched multi-source
+program (``DeltaSteppingSolver.solve_many``). ``--devices N`` (with
 XLA_FLAGS=--xla_force_host_platform_device_count=N) runs the
 distributed shard_map engine on an (sources × N_model) mesh.
+``--strategy pallas`` routes relaxation through the Pallas kernels
+(add ``--interpret`` off-TPU); on ``--graph gamemap`` that selects the
+grid-stencil kernel.
 """
 from __future__ import annotations
 
@@ -21,7 +26,10 @@ def main():
     ap.add_argument("--degree", type=int, default=20)
     ap.add_argument("--p", type=float, default=1e-2)
     ap.add_argument("--delta", type=int, default=10)
-    ap.add_argument("--strategy", default="edge", choices=["edge", "ell"])
+    ap.add_argument("--strategy", default="edge",
+                    choices=["edge", "ell", "pallas"])
+    ap.add_argument("--interpret", action="store_true",
+                    help="run pallas kernels in interpret mode (CPU)")
     ap.add_argument("--sources", type=int, default=1)
     ap.add_argument("--devices", type=int, default=0,
                     help="model-parallel width (0 = single-device engine)")
@@ -37,6 +45,7 @@ def main():
         grid_map, partition_edges, rmat, square_lattice, watts_strogatz)
 
     t0 = time.perf_counter()
+    free = None
     if args.graph == "smallworld":
         k = args.degree - args.degree % 2
         g = watts_strogatz(args.nodes, k, args.p, seed=0)
@@ -44,7 +53,7 @@ def main():
         g = rmat(args.nodes, args.nodes * args.degree, seed=0)
     elif args.graph == "gamemap":
         side = int(np.sqrt(args.nodes))
-        g, _ = grid_map(side, side, 0.1, seed=0)
+        g, free = grid_map(side, side, 0.1, seed=0)
         args.delta = 13
     else:
         g = square_lattice(int(np.sqrt(args.nodes)), weighted=True)
@@ -54,14 +63,13 @@ def main():
     sources = list(range(args.sources))
     if args.devices:
         import jax
+        from repro.compat import make_mesh
         from repro.core.distributed import (
             DistDeltaConfig, build_distributed_solver)
         n_dev = len(jax.devices())
         model = args.devices
         data = max(1, n_dev // model)
-        mesh = jax.make_mesh(
-            (data, model), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((data, model), ("data", "model"))
         part = partition_edges(g, model)
         solve = build_distributed_solver(
             part, mesh, DistDeltaConfig(delta=args.delta,
@@ -78,17 +86,29 @@ def main():
         from repro.core import DeltaConfig, DeltaSteppingSolver
         solver = DeltaSteppingSolver(
             g, DeltaConfig(delta=args.delta, strategy=args.strategy,
-                           pred_mode="argmin"))
-        solver.solve(0)            # warm up / compile
-        t0 = time.perf_counter()
-        dists = [solver.solve(s) for s in sources]
-        dist = np.stack([np.asarray(r.dist) for r in dists])
-        dt = time.perf_counter() - t0
-        r = dists[-1]
-        print(f"[sssp] Δ={args.delta} ({args.strategy}): "
-              f"{dt * 1e3 / len(sources):.1f} ms/source, "
-              f"buckets={int(r.outer_iters)}, "
-              f"light sweeps={int(r.inner_iters)}")
+                           pred_mode="argmin", interpret=args.interpret),
+            free_mask=free if args.strategy == "pallas" else None)
+        if len(sources) > 1:
+            # batched multi-source path: one program for all sources
+            solver.solve_many(sources)          # warm up / compile
+            t0 = time.perf_counter()
+            res = solver.solve_many(sources)
+            dist = np.asarray(res.dist)
+            dt = time.perf_counter() - t0
+            print(f"[sssp] Δ={args.delta} ({args.strategy}, batched x"
+                  f"{len(sources)}): {dt * 1e3 / len(sources):.1f} "
+                  f"ms/source, buckets={int(res.outer_iters.max())}, "
+                  f"light sweeps={int(res.inner_iters.max())}")
+        else:
+            solver.solve(0)            # warm up / compile
+            t0 = time.perf_counter()
+            r = solver.solve(sources[0])
+            dist = np.asarray(r.dist)[None]
+            dt = time.perf_counter() - t0
+            print(f"[sssp] Δ={args.delta} ({args.strategy}): "
+                  f"{dt * 1e3:.1f} ms/source, "
+                  f"buckets={int(r.outer_iters)}, "
+                  f"light sweeps={int(r.inner_iters)}")
 
     if args.verify:
         from repro.core import dijkstra

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.sharding import _RULES, _translate
 
 
@@ -126,7 +127,7 @@ def moe_apply_ep(p, cfg, x):
                       None) if use_scatter else P(dp_axes or None, None))
     wg_spec = P(model_ax, None, fsdp_axes or None)
     wd_spec = P(model_ax, fsdp_axes or None, None)
-    out = jax.shard_map(
+    out = shard_map(
         region, mesh=mesh,
         in_specs=(P(dp_axes or None, None), P(None, None),
                   wg_spec, wg_spec, wd_spec),

@@ -1,3 +1,9 @@
-from repro.serve.decode import BatchServer, Request, generate
+from repro.serve.decode import (
+    BatchServer,
+    Request,
+    SSSPQuery,
+    SSSPServer,
+    generate,
+)
 
-__all__ = ["generate", "BatchServer", "Request"]
+__all__ = ["generate", "BatchServer", "Request", "SSSPQuery", "SSSPServer"]

@@ -1,6 +1,13 @@
-"""Batched serving: prefill + greedy decode over a preallocated KV
-cache, plus a slot-based continuous-batching server for mixed request
-streams (the 'serve a small model with batched requests' driver).
+"""Batched serving: two workloads behind the same submit/step/drain
+idiom —
+
+* LM decode: prefill + greedy decode over a preallocated KV cache, with
+  a slot-based continuous-batching server for mixed request streams
+  (``BatchServer``).
+* SSSP queries: point-to-all / point-to-point shortest-path queries
+  against a preprocessed graph, answered in fixed-size microbatches by
+  the unified Δ-stepping engine's batched multi-source program
+  (``SSSPServer`` → ``DeltaSteppingSolver.solve_many``, DESIGN.md §3).
 """
 from __future__ import annotations
 
@@ -112,4 +119,80 @@ class BatchServer:
             done += self.step()
             if not self.queue and all(s is None for s in self.slots):
                 break
+        return done
+
+
+# ---------------------------------------------------------------------------
+# batched SSSP serving
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SSSPQuery:
+    """One shortest-path query. ``target=None`` asks for the full
+    distance vector; a concrete target additionally extracts the path
+    from the predecessor tree (requires pred_mode != 'none')."""
+
+    qid: int
+    source: int
+    target: Optional[int] = None
+    dist: Optional[np.ndarray] = None     # int64[n] (or scalar to target)
+    path: Optional[List[int]] = None
+    done: bool = False
+
+
+class SSSPServer:
+    """Microbatching SSSP server: queued queries are answered
+    ``batch_size`` at a time by one jitted batched multi-source program.
+    Short batches are padded by repeating the last source (the padded
+    lanes are discarded), so every step runs the same compiled shape —
+    the serving-side counterpart of ``BatchServer``'s fixed slot count."""
+
+    def __init__(self, graph, config=None, *, batch_size: int = 8,
+                 free_mask=None):
+        from repro.core import DeltaConfig, DeltaSteppingSolver
+        self.config = config or DeltaConfig()
+        self.solver = DeltaSteppingSolver(graph, self.config,
+                                          free_mask=free_mask)
+        self.batch_size = batch_size
+        self.queue: List[SSSPQuery] = []
+
+    def submit(self, query: SSSPQuery):
+        if query.target is not None and self.config.pred_mode == "none":
+            raise ValueError("point-to-point queries need a pred_mode")
+        self.queue.append(query)
+
+    def _extract_path(self, pred: np.ndarray, query: SSSPQuery):
+        path = [query.target]
+        while pred[path[-1]] >= 0:
+            path.append(int(pred[path[-1]]))
+        if path[-1] != query.source:      # unreachable target
+            return None
+        return path[::-1]
+
+    def step(self) -> List[SSSPQuery]:
+        """Serve one microbatch; returns the completed queries."""
+        if not self.queue:
+            return []
+        batch = self.queue[:self.batch_size]
+        self.queue = self.queue[self.batch_size:]
+        sources = [q.source for q in batch]
+        sources += [sources[-1]] * (self.batch_size - len(sources))
+        res = self.solver.solve_many(np.asarray(sources, np.int32))
+        dist = np.asarray(res.dist, np.int64)
+        pred = np.asarray(res.pred)
+        for i, q in enumerate(batch):
+            if q.target is None:
+                q.dist = dist[i]
+            else:
+                q.dist = dist[i, q.target]
+                q.path = self._extract_path(pred[i], q)
+            q.done = True
+        return batch
+
+    def run_to_completion(self, max_steps: int = 10_000):
+        done = []
+        for _ in range(max_steps):
+            if not self.queue:
+                break
+            done += self.step()
         return done

@@ -1,9 +1,9 @@
 """Δ-stepping engine vs the Dijkstra oracle across graph families,
 strategies, pred modes and Δ values — the correctness core of the repro."""
-import jax
 import numpy as np
 import pytest
 
+from repro.compat import enable_x64
 from repro.core import (
     DeltaConfig,
     DeltaSteppingSolver,
@@ -51,7 +51,7 @@ def test_matches_dijkstra(name, strategy, delta):
 @pytest.mark.parametrize("pred_mode", ["argmin", "packed"])
 def test_pred_tree_valid(name, pred_mode):
     g = GRAPHS[name]
-    ctx = jax.enable_x64(True) if pred_mode == "packed" else _null()
+    ctx = enable_x64() if pred_mode == "packed" else _null()
     with ctx:
         res = delta_stepping(g, 0, DeltaConfig(delta=10, pred_mode=pred_mode))
         dist = np.asarray(res.dist, np.int64)
@@ -114,6 +114,35 @@ def test_ell_frontier_capacity_overflow_flag():
     res = delta_stepping(
         g, 0, DeltaConfig(delta=100, strategy="ell", frontier_cap=2))
     assert bool(res.overflow)
+
+
+def test_ell_overflow_flag_vs_correctness():
+    """Regression for the ell frontier-capacity contract: whenever the
+    overflow flag does NOT trip, the capped run must be exact; and a cap
+    smaller than the true max frontier must trip the flag (a silent
+    truncation would return wrong distances with overflow=False)."""
+    g = GRAPHS["smallworld_dense"]
+    dref, _ = dijkstra(g, 0)
+    # delta=100 makes one giant bucket: the frontier spans most of the
+    # 120-vertex graph, so small caps must overflow.
+    saw_overflow = saw_exact = False
+    for cap in [2, 8, 30, g.n_nodes]:
+        res = delta_stepping(
+            g, 0, DeltaConfig(delta=100, strategy="ell", frontier_cap=cap))
+        if bool(res.overflow):
+            saw_overflow = True
+        else:
+            saw_exact = True
+            np.testing.assert_array_equal(
+                np.asarray(res.dist, np.int64), dref)
+    assert saw_overflow, "tiny caps should trip the overflow flag"
+    assert saw_exact, "cap=|V| can never overflow"
+    # a truncated run must not silently agree AND must flag itself
+    res2 = delta_stepping(
+        g, 0, DeltaConfig(delta=100, strategy="ell", frontier_cap=2))
+    assert bool(res2.overflow)
+    assert not np.array_equal(np.asarray(res2.dist, np.int64), dref), (
+        "cap=2 cannot cover the frontier; distances should be incomplete")
 
 
 def test_source_self_distance_zero():

@@ -74,12 +74,12 @@ _EP_SUBPROC = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import dataclasses, jax, jax.numpy as jnp
+    from repro.compat import make_mesh
     from repro.configs.base import LMConfig, MoEConfig
     from repro.models.transformer import init_lm, apply_lm
     from repro.models.sharding import sharding_rules
 
-    mesh = jax.make_mesh((2,2,2), ('pod','data','model'),
-                         axis_types=(jax.sharding.AxisType.Auto,)*3)
+    mesh = make_mesh((2,2,2), ('pod','data','model'))
     moe = MoEConfig(n_experts=8, top_k=2, d_ff_expert=32,
                     capacity_factor=4.0)
     cfg_d = LMConfig(name='m', n_layers=2, d_model=32, n_heads=4,

@@ -8,6 +8,9 @@ Invariants checked on arbitrary random digraphs:
   4. the result is invariant to Δ and to the relaxation strategy.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep, see requirements-dev.txt
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

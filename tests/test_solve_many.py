@@ -1,0 +1,89 @@
+"""Batched multi-source solve (DeltaSteppingSolver.solve_many): every
+lane must be bitwise identical to the corresponding per-source solve and
+equal to the Dijkstra oracle, across graph families, strategies and
+pred modes — the contract the serving path (serve.SSSPServer) and the
+benchmarks rely on."""
+import numpy as np
+import pytest
+
+from repro.compat import enable_x64
+from repro.core import DeltaConfig, DeltaSteppingSolver, dijkstra
+from repro.graphs import rmat, square_lattice, watts_strogatz
+
+
+def _graphs():
+    return {
+        "smallworld": watts_strogatz(300, 6, 0.05, seed=0),
+        "rmat": rmat(256, 2500, seed=2),
+        "lattice": square_lattice(17, weighted=True, seed=4),
+    }
+
+
+GRAPHS = _graphs()
+SOURCES = [0, 3, 17, 101]      # batch of >= 4 sources
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def _assert_lanes_match_solve(solver, res, sources):
+    for i, s in enumerate(sources):
+        one = solver.solve(int(s))
+        np.testing.assert_array_equal(np.asarray(res.dist[i]),
+                                      np.asarray(one.dist))
+        np.testing.assert_array_equal(np.asarray(res.pred[i]),
+                                      np.asarray(one.pred))
+        assert int(res.outer_iters[i]) == int(one.outer_iters)
+        assert int(res.inner_iters[i]) == int(one.inner_iters)
+        assert bool(res.overflow[i]) == bool(one.overflow)
+
+
+@pytest.mark.parametrize("name", sorted(GRAPHS))
+@pytest.mark.parametrize("pred_mode", ["none", "argmin", "packed"])
+def test_solve_many_bitwise_equals_solve_and_dijkstra(name, pred_mode):
+    g = GRAPHS[name]
+    ctx = enable_x64() if pred_mode == "packed" else _null()
+    with ctx:
+        solver = DeltaSteppingSolver(
+            g, DeltaConfig(delta=10, pred_mode=pred_mode))
+        res = solver.solve_many(SOURCES)
+        assert res.dist.shape == (len(SOURCES), g.n_nodes)
+        _assert_lanes_match_solve(solver, res, SOURCES)
+        for i, s in enumerate(SOURCES):
+            dref, _ = dijkstra(g, s)
+            np.testing.assert_array_equal(
+                np.asarray(res.dist[i], np.int64), dref)
+
+
+@pytest.mark.parametrize("strategy", ["ell", "pallas"])
+def test_solve_many_strategies(strategy):
+    """The batched path through the other backends (ell vmaps, pallas
+    runs the batch under lax.map) must match per-source solve too."""
+    g = GRAPHS["smallworld"]
+    solver = DeltaSteppingSolver(
+        g, DeltaConfig(delta=10, strategy=strategy, interpret=True))
+    res = solver.solve_many(SOURCES)
+    _assert_lanes_match_solve(solver, res, SOURCES)
+
+
+def test_solve_many_overflow_is_per_lane():
+    """A lane whose frontier exceeds the cap flags overflow without
+    poisoning the other lanes' flags."""
+    g = GRAPHS["smallworld"]
+    solver = DeltaSteppingSolver(
+        g, DeltaConfig(delta=10, strategy="ell", frontier_cap=40))
+    res = solver.solve_many(SOURCES)
+    for i, s in enumerate(SOURCES):
+        assert bool(res.overflow[i]) == bool(solver.solve(int(s)).overflow)
+
+
+def test_solve_many_rejects_bad_shapes():
+    g = GRAPHS["smallworld"]
+    solver = DeltaSteppingSolver(g, DeltaConfig(delta=10))
+    with pytest.raises(ValueError):
+        solver.solve_many(np.zeros((2, 2), np.int32))
