@@ -5,10 +5,14 @@ grows as p shrinks, and monotone improvement with Δ at p=0 (pure ring).
 The derived column reports bucket counts (outer iterations) — the
 mechanism behind the curve: larger Δ ⇒ fewer buckets ⇒ fewer phases,
 against more re-relaxation work per phase.
+
+After each manual sweep, one ``delta_auto`` row records the auto-tuner
+(repro.tune measured search) against the best hand-swept Δ — the
+acceptance bar is tuned time within 1.1x of the best manual row.
 """
 from __future__ import annotations
 
-from benchmarks.common import row, time_fn
+from benchmarks.common import row, scaled, time_fn, tuned_solver, tuned_tag
 from repro.core import DeltaConfig, DeltaSteppingSolver
 from repro.graphs import watts_strogatz
 
@@ -18,16 +22,23 @@ def main():
     for p in (0.0, 1e-4, 1e-2):
         # p=0 is the pure ring: diameter ~ n/2, thousands of buckets —
         # keep it small so the monotone-in-Δ curve stays measurable.
-        n = 1_000 if p == 0.0 else 10_000
+        n = scaled(1_000, floor=128) if p == 0.0 else scaled(10_000)
         g = watts_strogatz(n, k, p, seed=0)
+        best = None
         for delta in (1, 3, 5, 10, 20, 40):
             solver = DeltaSteppingSolver(
                 g, DeltaConfig(delta=delta, pred_mode="none"))
             res = solver.solve(0)
             t = time_fn(lambda: solver.solve(0).dist, reps=1)
+            best = t if best is None else min(best, t)
             row(f"fig1/p{p:g}/delta{delta}", t,
                 f"buckets={int(res.outer_iters)};"
                 f"light_sweeps={int(res.inner_iters)}")
+        rec, tuned = tuned_solver(g)
+        t_tu = time_fn(lambda: tuned.solve(0).dist, reps=1)
+        row(f"fig1/p{p:g}/delta_auto", t_tu,
+            f"{tuned_tag(rec)};vs_best_manual={t_tu / best:.2f}",
+            gate=False)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,249 @@
+"""Benchmark-regression gate: compare fresh BENCH_*.json perf records
+against the committed baselines under ``benchmarks/baselines/``.
+
+CI runs the bench suite in smoke mode (``BENCH_SMOKE=1``, small
+instances) and fails the ``bench-gate`` job when any row's
+``us_per_call`` exceeds its baseline by more than ``--tolerance``
+(default 1.5x — wide enough for shared-runner noise, tight enough to
+catch a real 2x slowdown). Tiny rows are exempted by an absolute floor
+(``--min-us``): a 40 µs row doubling to 80 µs is scheduler noise, not a
+regression.
+
+Row accounting, per baseline file:
+
+* current record missing or ``status != ok``  → FAIL
+* smoke-mode mismatch (comparing apples to oranges) → FAIL
+* row in baseline but not in current run      → FAIL (coverage loss)
+* row regressed past tolerance + floor        → FAIL
+* row only in current run                     → noted, passes (new
+  coverage lands first, gets a baseline on refresh)
+* row marked ``gate: false`` (informational, e.g. one-time tuning-search
+  cost — compile-noise dominated) → never compared
+
+Baselines are **hardware-specific** absolute times: records compare
+meaningfully only against baselines from comparable machines. On new CI
+hardware (or a first run on a different runner class), expect a red
+gate and refresh the baselines from the uploaded ``bench-records``
+workflow artifact — that is the calibration step, not a code fix.
+
+Refreshing baselines (the documented path, used when a slowdown is
+intended or hardware changed):
+
+    BENCH_SMOKE=1 BENCH_OUT_DIR=/tmp/bench python benchmarks/run.py
+    python benchmarks/check_regression.py --bench-dir /tmp/bench --update
+    git add benchmarks/baselines/ && git commit
+
+``--update`` expects a *full-suite* bench dir; it warns about baselines
+with no current record (a renamed/removed bench leaves an orphan that
+fails every future gate run) and deletes them when ``--prune`` is also
+given.
+
+Self-test (the injected-slowdown drill): ``--inject-slowdown 2.0``
+multiplies every current row's time before comparing — the gate must go
+red. tests/test_bench_gate.py pins this behaviour.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import shutil
+import sys
+
+DEFAULT_TOLERANCE = 1.5
+DEFAULT_MIN_US = 2_000.0
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE_DIR = os.path.join(_HERE, "baselines")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _rows(record: dict) -> dict:
+    return {r["name"]: r for r in record.get("rows", [])}
+
+
+def compare_records(
+    baseline: dict,
+    current: dict,
+    tolerance: float = DEFAULT_TOLERANCE,
+    min_us: float = DEFAULT_MIN_US,
+    inject_slowdown: float = 1.0,
+):
+    """Compare one bench record pair. Returns ``(failures, notes)`` —
+    lists of human-readable strings; empty ``failures`` means pass."""
+    failures, notes = [], []
+    name = baseline.get("bench", "?")
+    if current is None:
+        return [f"{name}: no current BENCH record (bench did not run)"], notes
+    if current.get("status") != "ok":
+        failures.append(f"{name}: status={current.get('status')!r}")
+    if bool(baseline.get("smoke")) != bool(current.get("smoke")):
+        failures.append(
+            f"{name}: smoke-mode mismatch (baseline smoke="
+            f"{baseline.get('smoke')}, current smoke={current.get('smoke')})"
+        )
+        return failures, notes
+    base_rows, cur_rows = _rows(baseline), _rows(current)
+    for row_name, base in sorted(base_rows.items()):
+        cur = cur_rows.get(row_name)
+        # the BASELINE flag is authoritative: a current run cannot exempt
+        # a gated row by flipping its own flag (or dropping the row)
+        if not base.get("gate", True):
+            continue  # informational row (e.g. one-time tuning cost)
+        if cur is None:
+            failures.append(f"{name}: row {row_name!r} disappeared")
+            continue
+        base_us = float(base["us_per_call"])
+        cur_us = float(cur["us_per_call"]) * inject_slowdown
+        ratio = cur_us / base_us if base_us > 0 else float("inf")
+        regressed = ratio > tolerance and (cur_us - base_us) > min_us
+        line = (
+            f"{name}: {row_name} {base_us:.0f}us -> "
+            f"{cur_us:.0f}us ({ratio:.2f}x)"
+        )
+        if regressed:
+            failures.append(line + f" > {tolerance}x tolerance")
+        elif ratio > tolerance:
+            notes.append(line + f" (within {min_us:.0f}us noise floor)")
+    for row_name in sorted(set(cur_rows) - set(base_rows)):
+        notes.append(f"{name}: new row {row_name!r} (no baseline yet)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Gate BENCH_*.json records against committed baselines."
+    )
+    ap.add_argument(
+        "--bench-dir",
+        default=".",
+        help="directory holding the fresh BENCH_*.json records",
+    )
+    ap.add_argument(
+        "--baseline-dir",
+        default=DEFAULT_BASELINE_DIR,
+        help="directory of committed baseline records",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=DEFAULT_TOLERANCE,
+        help="max allowed current/baseline time ratio (default 1.5)",
+    )
+    ap.add_argument(
+        "--min-us",
+        type=float,
+        default=DEFAULT_MIN_US,
+        help="absolute regression floor in microseconds (default 2000)",
+    )
+    ap.add_argument(
+        "--inject-slowdown",
+        type=float,
+        default=1.0,
+        metavar="FACTOR",
+        help="self-test: multiply current times by FACTOR (2.0 must fail)",
+    )
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="refresh baselines from --bench-dir instead of comparing",
+    )
+    ap.add_argument(
+        "--prune",
+        action="store_true",
+        help="with --update: delete baselines that have no current record "
+        "(renamed/removed benches)",
+    )
+    ap.add_argument(
+        "--allow-full",
+        action="store_true",
+        help="with --update: accept non-smoke (full-size) records",
+    )
+    args = ap.parse_args(argv)
+
+    if args.update:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        fresh = sorted(glob.glob(os.path.join(args.bench_dir, "BENCH_*.json")))
+        # validate everything before copying anything: a failed record
+        # must not leave a half-refreshed (mixed old/new) baseline set
+        for path in fresh:
+            record = _load(path)
+            if record.get("status") != "ok":
+                print(f"refusing to baseline failed record {path}", file=sys.stderr)
+                return 2
+            if not record.get("smoke") and not args.allow_full:
+                print(
+                    f"refusing to baseline non-smoke record {path}: the CI "
+                    "gate runs BENCH_SMOKE=1 and would fail every run on "
+                    "smoke-mode mismatch (--allow-full overrides)",
+                    file=sys.stderr,
+                )
+                return 2
+        updated = []
+        for path in fresh:
+            shutil.copy(path, os.path.join(args.baseline_dir, os.path.basename(path)))
+            updated.append(os.path.basename(path))
+        print(f"updated {len(updated)} baseline(s): {', '.join(updated)}")
+        for path in sorted(glob.glob(os.path.join(args.baseline_dir, "BENCH_*.json"))):
+            fname = os.path.basename(path)
+            if fname in updated:
+                continue
+            if args.prune:
+                os.unlink(path)
+                print(f"pruned orphaned baseline {fname}")
+            else:
+                print(
+                    f"warning: baseline {fname} has no current record "
+                    "(orphan — will fail the gate; re-run with --prune "
+                    "after a full-suite bench run to remove it)",
+                    file=sys.stderr,
+                )
+        return 0
+
+    baselines = sorted(glob.glob(os.path.join(args.baseline_dir, "BENCH_*.json")))
+    if not baselines:
+        print(f"no baselines under {args.baseline_dir}", file=sys.stderr)
+        return 2
+    all_failures, all_notes = [], []
+    for path in baselines:
+        baseline = _load(path)
+        cur_path = os.path.join(args.bench_dir, os.path.basename(path))
+        current = _load(cur_path) if os.path.exists(cur_path) else None
+        failures, notes = compare_records(
+            baseline,
+            current,
+            tolerance=args.tolerance,
+            min_us=args.min_us,
+            inject_slowdown=args.inject_slowdown,
+        )
+        all_failures += failures
+        all_notes += notes
+    for note in all_notes:
+        print(f"note: {note}")
+    if all_failures:
+        print(f"\n{len(all_failures)} benchmark regression(s):", file=sys.stderr)
+        for failure in all_failures:
+            print(f"  REGRESSION {failure}", file=sys.stderr)
+        print(
+            "\nIf intentional, refresh baselines (see module docstring):\n"
+            "  BENCH_SMOKE=1 BENCH_OUT_DIR=/tmp/bench python benchmarks/run.py\n"
+            "  python benchmarks/check_regression.py --bench-dir /tmp/bench "
+            "--update",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"bench-gate OK: {len(baselines)} record(s) within "
+        f"{args.tolerance}x of baseline"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,7 @@ parameter grids, same comparisons. Each bench prints
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Dict, List
 
@@ -17,6 +18,17 @@ import numpy as np
 
 # rows recorded since the last drain_records() call, in emit order
 _RECORDS: List[Dict] = []
+
+# BENCH_SMOKE=1 shrinks every instance ~8x: the CI bench-gate regime
+# (benchmarks/check_regression.py compares like-for-like, so baselines
+# under benchmarks/baselines/ are recorded in this mode too).
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
+
+def scaled(n: int, floor: int = 256) -> int:
+    """Instance size for the current mode: full-size normally, ~1/8
+    (floored) under BENCH_SMOKE so the CI gate finishes in minutes."""
+    return max(floor, n // 8) if SMOKE else n
 
 
 def time_fn(fn, *args, reps: int = 3, warmup: int = 1):
@@ -31,10 +43,54 @@ def time_fn(fn, *args, reps: int = 3, warmup: int = 1):
     return float(np.median(times))
 
 
-def row(name: str, seconds: float, derived: str = ""):
+def row(name: str, seconds: float, derived: str = "", gate: bool = True):
+    """Emit one CSV row and record it for the JSON perf record.
+    ``gate=False`` marks informational rows (e.g. one-time tuning-search
+    cost, which is compile-noise dominated) that the CI bench-gate
+    reports but does not apply its regression tolerance to."""
     print(f"{name},{seconds * 1e6:.0f},{derived}")
     _RECORDS.append({"name": name, "us_per_call": round(seconds * 1e6),
-                     "derived": derived})
+                     "derived": derived, "gate": gate})
+
+
+# in-process tuning cache shared across bench modules: several benches
+# construct the identical graph (same fingerprint), so one run.py
+# invocation searches it once, not four times
+_TUNE_CACHE = None
+
+
+def tuned_solver(g, *, sources=(0,), free_mask=None, use_cache=True,
+                 validate_sources=None):
+    """Measured-tuned solver plus its ``TuningRecord`` (pred_mode='none',
+    the benches' timing config). Every bench records one of these next
+    to its hand-picked config so BENCH_*.json carries untuned-vs-tuned
+    side by side (DESIGN.md §7). ``use_cache=False`` forces a fresh
+    search (for timing the search itself); ``validate_sources`` lists
+    the sources the *caller* will solve — ``tune.build_safe_solver``
+    drops a tuned frontier cap they overflow (a cached record can come
+    from a same-fingerprint graph the cap was never validated on)."""
+    global _TUNE_CACHE
+    from repro.core import DeltaConfig
+    from repro.tune import TuningCache, build_safe_solver, tune
+
+    if _TUNE_CACHE is None:
+        _TUNE_CACHE = TuningCache(None)
+    base = DeltaConfig(pred_mode="none")
+    rec = tune(g, base, sources=sources, free_mask=free_mask,
+               cache=_TUNE_CACHE if use_cache else None)
+    if not use_cache:
+        _TUNE_CACHE.put(rec)                    # later benches still reuse
+    _, solver = build_safe_solver(
+        g, rec.to_config(base),
+        sources=validate_sources if validate_sources is not None else sources,
+        free_mask=free_mask)
+    return rec, solver
+
+
+def tuned_tag(rec) -> str:
+    """Derived-column fragment describing a tuned operating point."""
+    cap = "none" if rec.frontier_cap is None else rec.frontier_cap
+    return f"tuned_delta={rec.delta};tuned_strategy={rec.strategy};cap={cap}"
 
 
 def drain_records() -> List[Dict]:

@@ -37,3 +37,15 @@ many = solver.solve_many([0, 1, 2, 3])
 assert np.array_equal(np.asarray(many.dist[0]), dist)
 print(f"solve_many: batch of {many.dist.shape[0]} sources, "
       f"{[int(o) for o in many.outer_iters]} buckets each")
+
+# auto-tuning: config="auto" picks Δ from graph statistics (the paper's
+# hand-swept Fig. 1 knob, estimated as Δ ≈ c·w̄/d̄ with zero measurement).
+# Answers never change — only time does.
+auto = DeltaSteppingSolver(g, "auto")
+res_auto = auto.solve(source=0)
+assert np.array_equal(np.asarray(res_auto.dist), dist)
+print(f"config='auto': Δ={auto.config.delta} "
+      f"({auto.config.strategy}), same distances ✓")
+# tune_cache="tuning.json" reuses records a measured search persisted —
+# run `python -m repro.launch.sssp --tune --tune-cache tuning.json`
+# (repro.tune.tune) once to populate it; "auto" alone never measures.

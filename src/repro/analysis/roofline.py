@@ -24,7 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Optional
 
 from repro.analysis.hlo import collective_stats
 

@@ -8,7 +8,7 @@ the family's serving entry point.
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from repro.configs.base import ShapeSpec
 

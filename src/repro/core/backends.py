@@ -317,7 +317,13 @@ class GridPallasBackend(_PallasScanMixin, RelaxBackend):
 def make_backend(graph: COOGraph, cfg, free_mask=None) -> RelaxBackend:
     """Route a (graph, config) pair to its backend. ``free_mask`` marks
     the game-map graph class: under ``strategy='pallas'`` it selects the
-    grid-stencil kernel instead of the ELL kernels."""
+    grid-stencil kernel instead of the ELL kernels. ``cfg="auto"``
+    consults the tuning subsystem (estimator + cache, DESIGN.md §7)."""
+    if isinstance(cfg, str):
+        from repro.tune import resolve_config   # lazy: tune imports core
+        if cfg != "auto":
+            raise ValueError(f"unknown config string {cfg!r}")
+        cfg = resolve_config(graph, free_mask=free_mask, sources=None)
     if cfg.strategy == "edge":
         return EdgeBackend.build(graph, cfg)
     if cfg.strategy == "ell":

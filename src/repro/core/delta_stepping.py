@@ -44,7 +44,6 @@ from repro.core import pack as packing
 from repro.core.backends import (
     RelaxBackend,
     dist_of as _dist_of,
-    edge_sweep,
     init_tent as _init_tent,
     make_backend,
 )
@@ -195,6 +194,22 @@ def _finish_pred(tent, coo: COOGraph, source, cfg: DeltaConfig):
 # public API
 # ---------------------------------------------------------------------------
 
+def _resolve_auto(graph, config, free_mask=None, tune_cache=None):
+    """Map ``config="auto"`` to a concrete ``DeltaConfig`` via the tuning
+    subsystem (lazy import: core must not depend on repro.tune at module
+    load — tune builds solvers from this module)."""
+    if not isinstance(config, str):
+        return config
+    if config != "auto":
+        raise ValueError(f"unknown config string {config!r} (did you mean "
+                         "'auto' or a DeltaConfig?)")
+    from repro.tune import resolve_config
+    # sources=None: the solver cannot know its future sources, so a
+    # tuning-chosen frontier cap is dropped rather than trusted
+    return resolve_config(graph, free_mask=free_mask, cache_path=tune_cache,
+                          sources=None)
+
+
 class DeltaSteppingSolver:
     """Preprocesses a graph once (paper's parallel preprocessing stage) and
     solves SSSP from arbitrary sources — singly (``solve``) or as a
@@ -204,10 +219,16 @@ class DeltaSteppingSolver:
 
     ``free_mask`` (bool[H, W]) marks the game-map graph class: together
     with ``strategy='pallas'`` it routes relaxation to the grid-stencil
-    kernel (DESIGN.md §3)."""
+    kernel (DESIGN.md §3).
+
+    ``config="auto"`` consults the tuning subsystem (DESIGN.md §7): a
+    cached ``TuningRecord`` for this graph's fingerprint if one exists,
+    the zero-measurement Δ estimator otherwise. ``tune_cache`` names the
+    persistent cache file to consult."""
 
     def __init__(self, graph: COOGraph, config: DeltaConfig = DeltaConfig(),
-                 *, free_mask=None):
+                 *, free_mask=None, tune_cache: Optional[str] = None):
+        config = _resolve_auto(graph, config, free_mask, tune_cache)
         self.config = config
         self.graph = graph
         if config.pred_mode == "packed":
@@ -257,5 +278,6 @@ class DeltaSteppingSolver:
 
 def delta_stepping(graph: COOGraph, source: int,
                    config: DeltaConfig = DeltaConfig()) -> SSSPResult:
-    """One-shot convenience wrapper around :class:`DeltaSteppingSolver`."""
+    """One-shot convenience wrapper around :class:`DeltaSteppingSolver`.
+    ``config="auto"`` picks Δ from graph statistics (DESIGN.md §7)."""
     return DeltaSteppingSolver(graph, config).solve(source)

@@ -36,14 +36,11 @@ the multi-source regime of the paper's betweenness-centrality citation
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core.backends import edge_candidates, scan_bucket

@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.structures import COOGraph
 
 
 @dataclasses.dataclass(frozen=True)

@@ -15,7 +15,6 @@ entries point at the all-sentinel row ``n`` and yield INF candidates.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -3,7 +3,6 @@ grid to TPU-aligned tiles (rows → block_rows multiple, cols → 128 lanes)
 with INF / blocked cells, dispatches kernel or oracle, and crops."""
 from __future__ import annotations
 
-from functools import partial
 
 import jax.numpy as jnp
 

@@ -35,7 +35,6 @@ import traceback
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, hbm_limit_gb=16.0):
-    import jax
     from repro.analysis.roofline import analyze
     from repro.launch.cells import build_cell
     from repro.launch.mesh import make_production_mesh, mesh_name

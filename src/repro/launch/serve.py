@@ -25,8 +25,18 @@ def _serve_sssp(args):
     from repro.serve import SSSPQuery, SSSPServer
 
     g = watts_strogatz(args.nodes, args.degree, 1e-2, seed=0)
-    srv = SSSPServer(g, DeltaConfig(delta=args.delta),
-                     batch_size=args.batch)
+    t0 = time.perf_counter()
+    # --tune = measured search; --tune-cache alone = cache hit or the
+    # zero-measurement estimator (same semantics as launch.sssp)
+    auto = args.tune or args.tune_cache is not None
+    config = "auto" if auto else DeltaConfig(delta=args.delta)
+    srv = SSSPServer(g, config, batch_size=args.batch, tune=args.tune,
+                     tune_cache=args.tune_cache)
+    if auto:
+        cfg = srv.config
+        print(f"[serve] tuned at graph load: Δ={cfg.delta} "
+              f"strategy={cfg.strategy} cap={cfg.frontier_cap} "
+              f"({time.perf_counter() - t0:.1f}s)")
     srv.submit(SSSPQuery(qid=-1, source=0))
     srv.step()                                  # warm up / compile
     rng = np.random.default_rng(0)
@@ -90,6 +100,10 @@ def main():
     ap.add_argument("--delta", type=int, default=10)
     ap.add_argument("--batch", type=int, default=8,
                     help="SSSP microbatch size (solve_many lanes)")
+    ap.add_argument("--tune", action="store_true",
+                    help="SSSP mode: measured auto-tune at graph load")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="SSSP mode: persistent tuning cache")
     args = ap.parse_args()
 
     if args.sssp:

@@ -11,6 +11,12 @@ distributed shard_map engine on an (sources × N_model) mesh.
 ``--strategy pallas`` routes relaxation through the Pallas kernels
 (add ``--interpret`` off-TPU); on ``--graph gamemap`` that selects the
 grid-stencil kernel.
+
+``--tune`` replaces the hand-picked ``--delta``/``--strategy`` with the
+measured (Δ, backend, packing) search (repro.tune, DESIGN.md §7);
+``--tune-cache PATH`` persists/reuses tuned records across runs — with
+``--tune-cache`` alone, a cache hit (or the zero-measurement estimator)
+picks the config without any search.
 """
 from __future__ import annotations
 
@@ -36,6 +42,13 @@ def main():
     ap.add_argument("--combine", default="reduce_scatter",
                     choices=["allreduce", "reduce_scatter"])
     ap.add_argument("--local-steps", type=int, default=1)
+    ap.add_argument("--tune", action="store_true",
+                    help="auto-tune (Δ, backend, packing) by measured "
+                         "search instead of --delta/--strategy "
+                         "(single-device engine only)")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="persistent JSON tuning cache; implies auto "
+                         "config (cache hit or heuristic estimator)")
     ap.add_argument("--verify", action="store_true")
     args = ap.parse_args()
 
@@ -84,10 +97,21 @@ def main():
               f"light sweeps={int(inner)}")
     else:
         from repro.core import DeltaConfig, DeltaSteppingSolver
+        cfg = DeltaConfig(delta=args.delta, strategy=args.strategy,
+                          pred_mode="argmin", interpret=args.interpret)
+        if args.tune or args.tune_cache:
+            from repro.tune import resolve_config
+            t0 = time.perf_counter()
+            # sources= the ones actually being solved: resolve_config
+            # validates a tuned frontier cap against exactly these
+            cfg = resolve_config(g, cfg, free_mask=free,
+                                 cache_path=args.tune_cache,
+                                 measure=args.tune, sources=sources)
+            print(f"[sssp] tuned config: Δ={cfg.delta} "
+                  f"strategy={cfg.strategy} cap={cfg.frontier_cap} "
+                  f"({time.perf_counter() - t0:.1f}s to tune)")
         solver = DeltaSteppingSolver(
-            g, DeltaConfig(delta=args.delta, strategy=args.strategy,
-                           pred_mode="argmin", interpret=args.interpret),
-            free_mask=free if args.strategy == "pallas" else None)
+            g, cfg, free_mask=free if cfg.strategy == "pallas" else None)
         if len(sources) > 1:
             # batched multi-source path: one program for all sources
             solver.solve_many(sources)          # warm up / compile
@@ -95,7 +119,7 @@ def main():
             res = solver.solve_many(sources)
             dist = np.asarray(res.dist)
             dt = time.perf_counter() - t0
-            print(f"[sssp] Δ={args.delta} ({args.strategy}, batched x"
+            print(f"[sssp] Δ={cfg.delta} ({cfg.strategy}, batched x"
                   f"{len(sources)}): {dt * 1e3 / len(sources):.1f} "
                   f"ms/source, buckets={int(res.outer_iters.max())}, "
                   f"light sweeps={int(res.inner_iters.max())}")
@@ -105,7 +129,7 @@ def main():
             r = solver.solve(sources[0])
             dist = np.asarray(r.dist)[None]
             dt = time.perf_counter() - t0
-            print(f"[sssp] Δ={args.delta} ({args.strategy}): "
+            print(f"[sssp] Δ={cfg.delta} ({cfg.strategy}): "
                   f"{dt * 1e3:.1f} ms/source, "
                   f"buckets={int(r.outer_iters)}, "
                   f"light sweeps={int(r.inner_iters)}")

@@ -13,7 +13,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DLRMConfig
-from repro.models.embedding import multi_hot_lookup
 from repro.models.layers import _dense_init
 from repro.models.sharding import constrain
 

@@ -11,7 +11,6 @@ All layers are pure functions over parameter pytrees.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ keeping model math independent of the mesh.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax

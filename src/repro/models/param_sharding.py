@@ -17,7 +17,6 @@ from typing import Any
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import DLRMConfig, GNNConfig, LMConfig
 from repro.models.sharding import DEFAULT_MAPPING
 
 

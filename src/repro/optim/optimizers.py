@@ -7,7 +7,6 @@ schedule. No optax dependency — the container is offline.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax

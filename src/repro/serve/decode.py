@@ -145,14 +145,37 @@ class SSSPServer:
     ``batch_size`` at a time by one jitted batched multi-source program.
     Short batches are padded by repeating the last source (the padded
     lanes are discarded), so every step runs the same compiled shape —
-    the serving-side counterpart of ``BatchServer``'s fixed slot count."""
+    the serving-side counterpart of ``BatchServer``'s fixed slot count.
+
+    Tuning happens once, at graph-load time: ``config="auto"`` resolves
+    (Δ, backend, packing) through the tuning subsystem (cache hit or
+    zero-measurement estimator; ``tune=True`` runs the measured search
+    instead) and every subsequent microbatch serves with that tuned
+    config — the search cost amortizes over the query stream
+    (DESIGN.md §7)."""
 
     def __init__(self, graph, config=None, *, batch_size: int = 8,
-                 free_mask=None):
+                 free_mask=None, tune: bool = False,
+                 tune_cache: Optional[str] = None):
         from repro.core import DeltaConfig, DeltaSteppingSolver
-        self.config = config or DeltaConfig()
+        config = config or DeltaConfig()
+        if isinstance(config, str) and config != "auto":
+            raise ValueError(f"unknown config string {config!r}")
+        if tune or isinstance(config, str):
+            from repro.tune import resolve_config
+            base = DeltaConfig() if isinstance(config, str) else config
+            # sources=None: the query stream is unknown at load time, so
+            # a tuning-chosen frontier cap is dropped up front (explicit
+            # caps from the caller keep the per-batch fallback below)
+            config = resolve_config(graph, base, free_mask=free_mask,
+                                    cache_path=tune_cache, measure=tune,
+                                    sources=None)
+        self.config = config
+        self.graph = graph
+        self.free_mask = free_mask
         self.solver = DeltaSteppingSolver(graph, self.config,
                                           free_mask=free_mask)
+        self._safe_solver = None      # lazy uncapped fallback (overflow)
         self.batch_size = batch_size
         self.queue: List[SSSPQuery] = []
 
@@ -178,6 +201,22 @@ class SSSPServer:
         sources = [q.source for q in batch]
         sources += [sources[-1]] * (self.batch_size - len(sources))
         res = self.solver.solve_many(np.asarray(sources, np.int32))
+        if bool(np.any(np.asarray(res.overflow))):
+            # a tuned frontier_cap was validated against the tuner's
+            # probe sources only; a batch lane that overflows it would
+            # return wrong distances — re-solve full-width (tuning may
+            # move time, never answers)
+            if self._safe_solver is None:
+                from repro.core import DeltaSteppingSolver
+                self._safe_solver = DeltaSteppingSolver(
+                    self.graph,
+                    dataclasses.replace(self.config, frontier_cap=None),
+                    free_mask=self.free_mask)
+            # demote permanently: a query mix that overflowed once would
+            # otherwise pay capped + uncapped solves on every step
+            self.solver = self._safe_solver
+            res = self._safe_solver.solve_many(
+                np.asarray(sources, np.int32))
         dist = np.asarray(res.dist, np.int64)
         pred = np.asarray(res.pred)
         for i, q in enumerate(batch):

@@ -5,7 +5,6 @@ update is in-place on device.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional
 
 import jax

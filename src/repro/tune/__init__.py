@@ -1,0 +1,49 @@
+"""Auto-tuning subsystem for the Δ-stepping engine (DESIGN.md §7).
+
+The paper sweeps Δ per graph family and picks winners by hand (Fig. 1);
+Dong et al. 2021 and Blelloch et al. 2016 show the step parameter can —
+and should — be chosen from graph structure instead. Three layers:
+
+* ``estimator`` — zero-measurement heuristic: graph statistics (degree
+  distribution, weight range) → Δ ≈ c·w̄/d̄, plus the graph fingerprint
+  that keys the cache.
+* ``search`` — empirical tuner: short measured solves over the
+  (Δ, backend, frontier-packing) space with successive-halving pruning,
+  returning a ``TuningRecord``.
+* ``cache`` — persistent JSON store of ``TuningRecord``s keyed by
+  fingerprint, so repeat workloads skip the search.
+
+``resolve_config`` is the single entry point the engine consults when a
+caller passes ``config="auto"`` (core.delta_stepping, core.backends,
+serve.SSSPServer, launch.sssp).
+"""
+
+from repro.tune.cache import TuningCache
+from repro.tune.estimator import (
+    GraphStats,
+    estimate_delta,
+    fingerprint,
+    graph_stats,
+)
+from repro.tune.search import (
+    TuningRecord,
+    build_safe_solver,
+    candidate_configs,
+    heuristic_record,
+    resolve_config,
+    tune,
+)
+
+__all__ = [
+    "GraphStats",
+    "TuningCache",
+    "TuningRecord",
+    "build_safe_solver",
+    "candidate_configs",
+    "estimate_delta",
+    "fingerprint",
+    "graph_stats",
+    "heuristic_record",
+    "resolve_config",
+    "tune",
+]

@@ -1,0 +1,372 @@
+"""Empirical (Δ, backend, frontier-packing) tuner (DESIGN.md §7).
+
+The search space is the engine's perf-hillclimb axes: a geometric Δ grid
+centred on the heuristic estimate (``estimator.estimate_delta``), the
+relaxation backend (``edge`` / ``ell`` / optionally ``pallas``), and the
+frontier packing — the compaction capacity of the ELL-family backends
+(full |V| vs a fraction; candidates whose measured solve trips the
+``overflow`` flag are rejected, never returned).
+
+Pruning is successive halving: every surviving candidate is measured
+with a short budget (one timed solve after a compile warm-up), the
+slower half is dropped, the budget doubles, repeat until one remains.
+Total measured work is ~2× the cost of timing every candidate once,
+instead of the full-sweep cost of the paper's by-hand Fig. 1 protocol.
+
+The result is a ``TuningRecord`` — a plain serializable fact about one
+graph fingerprint — which ``cache.TuningCache`` persists and
+``resolve_config`` turns back into a concrete ``DeltaConfig``.
+Correctness does not depend on the tuner: every candidate config is
+exact (tested bitwise-equal to the hand-picked engine), so tuning only
+ever moves time, not answers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.delta_stepping import DeltaConfig, DeltaSteppingSolver
+from repro.graphs.structures import COOGraph
+from repro.tune.estimator import (
+    GraphStats,
+    estimate_delta,
+    fingerprint,
+    graph_stats,
+)
+
+# Δ grid: estimate × these factors (deduplicated, floored at 1).
+_DELTA_FACTORS = (0.25, 0.5, 1.0, 2.0, 4.0)
+
+# Frontier packing: compaction capacity as a fraction of |V| (ELL-family
+# backends only; 1.0 is the always-safe full-width buffer).
+_CAP_FRACTIONS = (1.0, 0.25)
+
+_MIN_CAP = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningRecord:
+    """One tuned operating point for one graph fingerprint.
+
+    ``source`` records provenance: ``'heuristic'`` (estimator only, zero
+    measurement), ``'measured'`` (successive-halving search), or
+    ``'cache'`` (loaded from a ``TuningCache``). ``trials`` keeps the
+    latest (best-sampled) measurement of every viable candidate, sorted
+    fastest-first — the evidence trail the cache file exposes for
+    why-did-this-win inspection.
+    """
+
+    fingerprint: str
+    delta: int
+    strategy: str
+    frontier_cap: Optional[int]
+    source: str
+    us_per_solve: Optional[float] = None
+    trials: Tuple[Tuple[int, str, int, float], ...] = ()
+
+    def to_config(self, base: Optional[DeltaConfig] = None) -> DeltaConfig:
+        """Concrete engine config: tuned (Δ, strategy, cap) over the
+        caller's base for everything else (pred_mode, interpret, ...)."""
+        base = base if base is not None else DeltaConfig()
+        return dataclasses.replace(
+            base,
+            delta=self.delta,
+            strategy=self.strategy,
+            frontier_cap=self.frontier_cap,
+        )
+
+    def to_json(self) -> dict:
+        return {
+            "fingerprint": self.fingerprint,
+            "delta": self.delta,
+            "strategy": self.strategy,
+            "frontier_cap": self.frontier_cap,
+            "source": self.source,
+            "us_per_solve": self.us_per_solve,
+            "trials": [list(t) for t in self.trials],
+        }
+
+    @classmethod
+    def from_json(cls, d: dict) -> "TuningRecord":
+        return cls(
+            fingerprint=d["fingerprint"],
+            delta=int(d["delta"]),
+            strategy=d["strategy"],
+            frontier_cap=(
+                None if d.get("frontier_cap") is None else int(d["frontier_cap"])
+            ),
+            source=d.get("source", "cache"),
+            us_per_solve=d.get("us_per_solve"),
+            trials=tuple(
+                (int(a), str(b), int(c), float(t))
+                for a, b, c, t in d.get("trials", [])
+            ),
+        )
+
+
+def heuristic_record(
+    graph: COOGraph,
+    base: Optional[DeltaConfig] = None,
+    stats: Optional[GraphStats] = None,
+) -> TuningRecord:
+    """Zero-measurement record: estimator Δ, base strategy/packing.
+    ``fingerprint`` is empty when the stats skipped the hop-radius probe
+    (pure-heuristic path: nothing to key a cache with)."""
+    base = base if base is not None else DeltaConfig()
+    stats = stats if stats is not None else graph_stats(graph)
+    return TuningRecord(
+        fingerprint=fingerprint(stats) if stats.ecc0 >= 0 else "",
+        delta=estimate_delta(stats),
+        strategy=base.strategy,
+        frontier_cap=base.frontier_cap,
+        source="heuristic",
+    )
+
+
+def candidate_configs(
+    stats: GraphStats,
+    strategies: Sequence[str] = ("edge", "ell"),
+    deltas: Optional[Sequence[int]] = None,
+    cap_fractions: Sequence[float] = _CAP_FRACTIONS,
+) -> list:
+    """The (Δ, strategy, frontier_cap) grid the tuner searches. Edge
+    strategy ignores packing (no compaction), so it contributes one
+    candidate per Δ; ELL-family strategies get one per cap fraction."""
+    if deltas is None:
+        est = estimate_delta(stats)
+        deltas = sorted({max(1, int(round(est * f))) for f in _DELTA_FACTORS})
+    n = stats.n_nodes
+    out = []
+    for delta in deltas:
+        for strat in strategies:
+            if strat == "edge":
+                out.append((delta, strat, None))
+            else:
+                for frac in cap_fractions:
+                    cap = None if frac >= 1.0 else max(_MIN_CAP, int(n * frac))
+                    out.append((delta, strat, cap))
+    return out
+
+
+def _candidate_solver(graph, cfg, sources, free_mask=None):
+    """Build + warm up + validate one candidate's solver; ``None`` when
+    the config is unusable for *any* probe source (overflow or build
+    failure) — an overflowed run is a wrong-answer run and its time
+    must never compete."""
+    try:
+        solver = DeltaSteppingSolver(graph, cfg, free_mask=free_mask)
+        for s in sources:  # warm up / compile + validate every source
+            if bool(solver.solve(int(s)).overflow):
+                return None
+    except Exception:
+        return None
+    return solver
+
+
+def _time_solver(solver, sources, reps: int) -> float:
+    """Median seconds per solve on an already-warm solver."""
+    times = []
+    for _ in range(reps):
+        for s in sources:
+            t0 = time.perf_counter()
+            jax.block_until_ready(solver.solve(int(s)).dist)
+            times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def build_safe_solver(
+    graph: COOGraph,
+    cfg: DeltaConfig,
+    *,
+    sources: Sequence[int] = (0,),
+    free_mask=None,
+):
+    """Build a solver whose ``frontier_cap`` is validated against the
+    caller's actual sources, not just the tuner's probe sources — the
+    one shared enforcement point of the 'tuning may move time, never
+    answers' invariant (a cached record can come from a same-fingerprint
+    graph, and a capped winner was only ever validated on the sources it
+    was measured with). Returns ``(config, solver)``; on overflow the
+    cap is dropped and the solver rebuilt full-width. Consumers with a
+    *dynamic* source stream (serve.SSSPServer) instead re-check the
+    overflow flag per batch at serve time."""
+
+    def build(c):
+        return DeltaSteppingSolver(
+            graph,
+            c,
+            free_mask=free_mask if c.strategy == "pallas" else None,
+        )
+
+    solver = build(cfg)
+    if cfg.frontier_cap is not None:
+        srcs = [int(s) for s in sources]
+        if len(srcs) > 1:
+            over = solver.solve_many(np.asarray(srcs, np.int32)).overflow
+            tripped = bool(np.any(np.asarray(over)))
+        else:
+            tripped = bool(solver.solve(srcs[0]).overflow)
+        if tripped:
+            cfg = dataclasses.replace(cfg, frontier_cap=None)
+            solver = build(cfg)
+    return cfg, solver
+
+
+def tune(
+    graph: COOGraph,
+    base: Optional[DeltaConfig] = None,
+    *,
+    sources: Sequence[int] = (0,),
+    strategies: Sequence[str] = ("edge", "ell"),
+    deltas: Optional[Sequence[int]] = None,
+    cap_fractions: Sequence[float] = _CAP_FRACTIONS,
+    cache=None,
+    free_mask=None,
+    measure_fn=None,
+) -> TuningRecord:
+    """Measured search with successive-halving pruning.
+
+    ``base`` supplies the non-searched config fields (pred_mode is
+    forced to ``'none'`` during measurement — predecessor recovery is
+    off the timed path — and restored by ``TuningRecord.to_config``).
+    ``cache`` (a ``TuningCache``-shaped object) is consulted before the
+    search and updated — and saved — after it. ``measure_fn`` overrides
+    the timing primitive (tests inject deterministic costs).
+    """
+    base = base if base is not None else DeltaConfig()
+    stats = graph_stats(graph)
+    fp = fingerprint(stats)
+    if cache is not None:
+        hit = cache.get(fp)
+        if hit is not None:
+            return dataclasses.replace(hit, source="cache")
+
+    bench_cfg = dataclasses.replace(base, pred_mode="none")
+    if measure_fn is None:
+        # one solver (and one compile + overflow validation) per
+        # candidate for the whole search: later halving rounds re-time
+        # the warm solver instead of re-paying the build
+        solvers = {}
+
+        def measure_fn(delta, strat, cap, reps):
+            key = (delta, strat, cap)
+            if key not in solvers:
+                cfg = dataclasses.replace(
+                    bench_cfg, delta=delta, strategy=strat, frontier_cap=cap
+                )
+                solvers[key] = _candidate_solver(
+                    graph, cfg, sources, free_mask=free_mask
+                )
+            if solvers[key] is None:
+                return float("inf")
+            return _time_solver(solvers[key], sources, reps)
+
+    survivors = candidate_configs(
+        stats, strategies=strategies, deltas=deltas, cap_fractions=cap_fractions
+    )
+    reps = 1
+    evidence = {}  # candidate -> its latest (best-sampled) measurement
+    timed = []
+    while True:
+        timed = [(measure_fn(d, s, c, reps), (d, s, c)) for d, s, c in survivors]
+        timed.sort(key=lambda x: x[0])
+        timed = [t for t in timed if np.isfinite(t[0])]
+        evidence.update({cand: t for t, cand in timed})
+        if not timed:
+            # every candidate overflowed/failed: fall back to heuristic
+            return heuristic_record(graph, base, stats)
+        if len(timed) == 1:
+            break
+        survivors = [cand for _, cand in timed[: (len(timed) + 1) // 2]]
+        if len(survivors) == 1:
+            # one final, better-sampled measurement of the winner
+            reps *= 2
+            d, s, c = survivors[0]
+            timed = [(measure_fn(d, s, c, reps), (d, s, c))]
+            evidence[(d, s, c)] = timed[0][0]
+            break
+        reps *= 2
+
+    best_t, (delta, strat, cap) = timed[0]
+    record = TuningRecord(
+        fingerprint=fp,
+        delta=delta,
+        strategy=strat,
+        frontier_cap=cap,
+        source="measured",
+        us_per_solve=round(best_t * 1e6, 1),
+        trials=tuple(
+            (d, s, -1 if c is None else c, round(t * 1e6, 1))
+            for (d, s, c), t in sorted(evidence.items(), key=lambda kv: kv[1])
+        ),
+    )
+    if cache is not None:
+        cache.put(record)
+        cache.save()
+    return record
+
+
+def resolve_config(
+    graph: COOGraph,
+    base: Optional[DeltaConfig] = None,
+    *,
+    free_mask=None,
+    cache_path: Optional[str] = None,
+    measure: bool = False,
+    sources: Optional[Sequence[int]] = (0,),
+) -> DeltaConfig:
+    """The ``config="auto"`` entry point: cache hit → tuned config;
+    otherwise the zero-measurement estimator (or, with ``measure=True``,
+    the successive-halving search, persisted when a cache path is
+    given).
+
+    A tuning-chosen ``frontier_cap`` never reaches the engine
+    unvalidated (cache records can come from a same-fingerprint graph
+    the cap was never checked on): with ``sources`` given, the cap is
+    re-validated against exactly those sources (one warm solve) and
+    dropped on overflow; with ``sources=None`` — a caller that cannot
+    know its future sources, like the core ``config="auto"`` path — the
+    cap is dropped outright. Tuning may move time, never answers."""
+    base = base if base is not None else DeltaConfig()
+    if cache_path is not None or measure:
+        from repro.tune.cache import TuningCache
+
+        cache = TuningCache(cache_path)
+        probe = sources if sources is not None else (0,)
+        if measure:
+            rec = tune(
+                graph, base, sources=probe, cache=cache, free_mask=free_mask
+            )
+        else:
+            stats = graph_stats(graph)
+            rec = cache.get(fingerprint(stats))
+            if rec is None:
+                rec = heuristic_record(graph, base, stats)
+        cfg = rec.to_config(base)
+        # only a record fresh from THIS call's measured search was
+        # already validated against these probe sources (tune() re-marks
+        # its own cache hits source="cache"; a measure=False cache.get
+        # returns the stored record with its original source, which
+        # proves nothing about this graph). sources=None callers can
+        # never trust a cap: the probe covered (0,) only.
+        tuned_cap = (
+            cfg.frontier_cap is not None and cfg.frontier_cap != base.frontier_cap
+        )
+        validated = measure and rec.source == "measured" and sources is not None
+        if tuned_cap and not validated:
+            if sources is None:
+                cfg = dataclasses.replace(cfg, frontier_cap=None)
+            else:
+                cfg, _ = build_safe_solver(
+                    graph, cfg, sources=sources, free_mask=free_mask
+                )
+        return cfg
+    # pure-heuristic path: degrees and weights are enough — skip the
+    # O(diameter·|E|) hop-radius probe (no cache key to build)
+    stats = graph_stats(graph, probe_ecc=False)
+    return heuristic_record(graph, base, stats).to_config(base)

@@ -2,7 +2,6 @@
 roofline term arithmetic on a real compiled program."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.analysis import collective_stats, estimate_model_flops
 from repro.analysis.roofline import V5E, analyze

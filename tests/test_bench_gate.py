@@ -1,0 +1,183 @@
+"""CI bench-gate plumbing: the regression checker's verdict logic
+(including the injected-2x-slowdown drill the gate is certified with)
+and the bench driver's exit-code contract — ``benchmarks/run.py`` must
+exit non-zero when any bench module fails, or the gate can't trust a
+green run."""
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)
+
+from benchmarks import run as bench_run                      # noqa: E402
+from benchmarks.check_regression import compare_records, main  # noqa: E402
+
+
+def _record(times, status="ok", smoke=True):
+    return {
+        "bench": "demo",
+        "status": status,
+        "smoke": smoke,
+        "rows": [{"name": n, "us_per_call": us, "derived": ""}
+                 for n, us in times.items()],
+    }
+
+
+BASE = {"a/fast": 10_000, "a/slow": 100_000}
+
+
+def test_identical_records_pass():
+    failures, notes = compare_records(_record(BASE), _record(BASE))
+    assert failures == [] and notes == []
+
+
+def test_two_x_slowdown_fails():
+    cur = {k: 2 * v for k, v in BASE.items()}
+    failures, _ = compare_records(_record(BASE), _record(cur))
+    assert len(failures) == 2
+    assert all("1.5x tolerance" in f for f in failures)
+
+
+def test_injected_slowdown_drill():
+    """The certification drill from the module docstring: identical
+    records with --inject-slowdown 2.0 must go red."""
+    failures, _ = compare_records(_record(BASE), _record(BASE),
+                                  inject_slowdown=2.0)
+    assert failures
+
+
+def test_ungated_rows_never_compared():
+    base = _record({"a/tune_cost": 1_000_000})
+    base["rows"][0]["gate"] = False
+    cur = _record({"a/tune_cost": 10_000_000})  # 10x, but informational
+    cur["rows"][0]["gate"] = False
+    failures, _ = compare_records(base, cur)
+    assert failures == []
+    # dropping an informational row is also fine
+    failures, _ = compare_records(base, _record({}))
+    assert failures == []
+
+
+def test_current_run_cannot_exempt_a_gated_row():
+    """The baseline flag is authoritative: a PR flipping a gated row to
+    gate=False (to hide a slowdown) must still be compared."""
+    cur = _record({"a/fast": 40_000, "a/slow": 100_000})
+    for r in cur["rows"]:
+        r["gate"] = False
+    failures, _ = compare_records(_record(BASE), cur)
+    assert any("a/fast" in f for f in failures)
+
+
+def test_noise_floor_exempts_tiny_rows():
+    base = {"a/tiny": 100}
+    cur = {"a/tiny": 300}                       # 3x but only +200us
+    failures, notes = compare_records(_record(base), _record(cur),
+                                      min_us=2_000)
+    assert failures == []
+    assert notes and "noise floor" in notes[0]
+
+
+def test_missing_row_and_failed_status_fail():
+    cur = _record({"a/fast": 10_000}, status="failed")
+    failures, _ = compare_records(_record(BASE), cur)
+    assert any("disappeared" in f for f in failures)
+    assert any("status" in f for f in failures)
+    failures, _ = compare_records(_record(BASE), None)
+    assert failures
+
+
+def test_smoke_mismatch_fails_new_rows_noted():
+    cur = _record(dict(BASE, **{"a/new": 5_000}))
+    failures, notes = compare_records(_record(BASE), cur)
+    assert failures == []
+    assert any("new row" in n for n in notes)
+    failures, _ = compare_records(_record(BASE, smoke=False), cur)
+    assert any("smoke-mode mismatch" in f for f in failures)
+
+
+def test_check_regression_cli(tmp_path):
+    base_dir, cur_dir = tmp_path / "base", tmp_path / "cur"
+    base_dir.mkdir(), cur_dir.mkdir()
+    (base_dir / "BENCH_demo.json").write_text(json.dumps(_record(BASE)))
+    (cur_dir / "BENCH_demo.json").write_text(json.dumps(_record(BASE)))
+    common = ["--bench-dir", str(cur_dir), "--baseline-dir", str(base_dir)]
+    assert main(common) == 0
+    assert main(common + ["--inject-slowdown", "2.0"]) == 1
+    assert main(["--bench-dir", str(cur_dir),
+                 "--baseline-dir", str(tmp_path / "nope")]) == 2
+
+
+def test_update_refuses_non_smoke_records(tmp_path):
+    """Baselining a full-size run would make every BENCH_SMOKE=1 gate
+    run fail on smoke-mode mismatch; --allow-full is the override."""
+    cur_dir, base_dir = tmp_path / "cur", tmp_path / "base"
+    cur_dir.mkdir()
+    (cur_dir / "BENCH_demo.json").write_text(
+        json.dumps(_record(BASE, smoke=False)))
+    args = ["--bench-dir", str(cur_dir), "--baseline-dir", str(base_dir)]
+    assert main(args + ["--update"]) == 2
+    assert not (base_dir / "BENCH_demo.json").exists()
+    assert main(args + ["--update", "--allow-full"]) == 0
+    assert (base_dir / "BENCH_demo.json").exists()
+
+
+def test_update_warns_about_and_prunes_orphans(tmp_path, capsys):
+    base_dir, cur_dir = tmp_path / "base", tmp_path / "cur"
+    base_dir.mkdir(), cur_dir.mkdir()
+    (base_dir / "BENCH_renamed_away.json").write_text(json.dumps(_record(BASE)))
+    (cur_dir / "BENCH_demo.json").write_text(json.dumps(_record(BASE)))
+    args = ["--bench-dir", str(cur_dir), "--baseline-dir", str(base_dir)]
+    assert main(args + ["--update"]) == 0
+    assert "orphan" in capsys.readouterr().err
+    assert (base_dir / "BENCH_renamed_away.json").exists()  # warned only
+    assert main(args + ["--update", "--prune"]) == 0
+    assert not (base_dir / "BENCH_renamed_away.json").exists()
+    assert (base_dir / "BENCH_demo.json").exists()
+    assert main(args) == 0                                  # gate green now
+
+
+def test_check_regression_update_refuses_failed(tmp_path):
+    cur_dir, base_dir = tmp_path / "cur", tmp_path / "base"
+    cur_dir.mkdir()
+    # alphabetically-earlier OK record must NOT be half-copied when a
+    # later record is failed: validate-all-then-copy
+    (cur_dir / "BENCH_aaa.json").write_text(json.dumps(_record(BASE)))
+    (cur_dir / "BENCH_demo.json").write_text(
+        json.dumps(_record(BASE, status="failed")))
+    rc = main(["--bench-dir", str(cur_dir),
+               "--baseline-dir", str(base_dir), "--update"])
+    assert rc == 2
+    assert not (base_dir / "BENCH_aaa.json").exists()
+
+
+# ---------------------------------------------------------------------------
+# benchmarks/run.py exit-code contract
+# ---------------------------------------------------------------------------
+
+def test_run_exits_nonzero_on_bench_failure(tmp_path, monkeypatch):
+    import benchmarks.bench_smallworld as bsw
+
+    def boom():
+        raise RuntimeError("injected bench failure")
+
+    monkeypatch.setattr(bsw, "main", boom)
+    monkeypatch.setenv("BENCH_OUT_DIR", str(tmp_path))
+    assert bench_run.main(["--only", "smallworld"]) == 1
+    record = json.loads((tmp_path / "BENCH_smallworld.json").read_text())
+    assert record["status"] == "failed"
+
+
+def test_run_exits_zero_on_success(tmp_path, monkeypatch):
+    import benchmarks.bench_smallworld as bsw
+    monkeypatch.setattr(bsw, "main", lambda: None)
+    monkeypatch.setenv("BENCH_OUT_DIR", str(tmp_path))
+    assert bench_run.main(["--only", "smallworld"]) == 0
+    record = json.loads((tmp_path / "BENCH_smallworld.json").read_text())
+    assert record["status"] == "ok"
+
+
+def test_run_rejects_unknown_module(capsys):
+    assert bench_run.main(["--only", "nonexistent"]) == 2
+    assert "unknown bench" in capsys.readouterr().err

@@ -1,0 +1,123 @@
+"""Bucket-boundary semantics pins: distances exactly on a Δ multiple.
+
+The tuner's Δ search makes these the hottest edge cases — a candidate Δ
+that divides many path lengths puts whole frontiers exactly on bucket
+boundaries. The contract being pinned (paper C1 + Alg. 1 light/heavy
+split):
+
+* a vertex with dist == k·Δ belongs to bucket k (floor division), not
+  bucket k-1;
+* an edge with w == Δ is *light* (w <= Δ), w == Δ+1 is heavy;
+* a settled vertex (explored == dist) is excluded from the frontier
+  (strict ``dist < explored``);
+* the Pallas ``bucket_scan`` kernel agrees with the jnp ``scan_bucket``
+  twin on boundary inputs.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DeltaConfig, delta_stepping, dijkstra, scan_bucket
+from repro.core.backends import edge_candidates
+from repro.graphs import square_lattice
+from repro.graphs.structures import COOGraph, INF32
+from repro.kernels.bucket_scan import bucket_scan
+
+_IMAX = 2**31 - 1
+
+
+def _path_graph(k, w):
+    """0 -> 1 -> ... -> k, every weight w: dist[i] = i*w, all boundary."""
+    src = jnp.arange(k, dtype=jnp.int32)
+    dst = src + 1
+    ww = jnp.full((k,), w, jnp.int32)
+    return COOGraph(src, dst, ww, k + 1)
+
+
+def test_scan_bucket_exact_multiples():
+    delta = 10
+    dist = jnp.array([0, 10, 20, 25, INF32], jnp.int32)
+    explored = jnp.full((5,), INF32, jnp.int32)
+    f, any_, nxt = scan_bucket(dist, explored, jnp.int32(0), delta=delta)
+    np.testing.assert_array_equal(
+        np.asarray(f), [True, False, False, False, False])
+    assert bool(any_) and int(nxt) == 1         # dist 10 is bucket 1, not 0
+    f, any_, nxt = scan_bucket(dist, explored, jnp.int32(1), delta=delta)
+    np.testing.assert_array_equal(
+        np.asarray(f), [False, True, False, False, False])
+    assert int(nxt) == 2
+    f, any_, nxt = scan_bucket(dist, explored, jnp.int32(2), delta=delta)
+    np.testing.assert_array_equal(
+        np.asarray(f), [False, False, True, True, False])
+    assert int(nxt) == _IMAX                     # INF32 never opens a bucket
+
+
+def test_scan_bucket_settled_vertex_excluded():
+    """explored == dist means settled: strict < keeps it off the
+    frontier (otherwise the light phase would never terminate)."""
+    delta = 10
+    dist = jnp.array([10, 10], jnp.int32)
+    explored = jnp.array([10, INF32], jnp.int32)
+    f, any_, _ = scan_bucket(dist, explored, jnp.int32(1), delta=delta)
+    np.testing.assert_array_equal(np.asarray(f), [False, True])
+    assert bool(any_)
+
+
+@pytest.mark.parametrize("bucket_i", [0, 1, 3])
+def test_pallas_bucket_scan_agrees_on_boundaries(bucket_i):
+    delta = 10
+    dist = jnp.array([0, 9, 10, 11, 20, 30, 30, INF32, 40], jnp.int32)
+    explored = jnp.array(
+        [0, INF32, 10, INF32, INF32, 30, INF32, INF32, INF32], jnp.int32)
+    ref = scan_bucket(dist, explored, jnp.int32(bucket_i), delta=delta)
+    ker = bucket_scan(dist, explored, jnp.int32(bucket_i), delta=delta,
+                      backend="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref[0]), np.asarray(ker[0]))
+    assert bool(ref[1]) == bool(ker[1])
+    assert int(ref[2]) == int(ker[2])
+
+
+def test_edge_candidates_weight_equal_delta_is_light():
+    delta = 10
+    d_src = jnp.array([0, 0, 0, INF32], jnp.int32)
+    f_src = jnp.array([True, True, True, True])
+    w = jnp.array([10, 11, 9, 5], jnp.int32)
+    cand, ok_light = edge_candidates(d_src, f_src, w, delta=delta, light=True)
+    np.testing.assert_array_equal(
+        np.asarray(ok_light), [True, False, True, False])   # w==Δ light
+    _, ok_heavy = edge_candidates(d_src, f_src, w, delta=delta, light=False)
+    np.testing.assert_array_equal(
+        np.asarray(ok_heavy), [False, True, False, False])  # w==Δ+1 heavy
+    np.testing.assert_array_equal(np.asarray(cand)[:3], [10, 11, 9])
+
+
+@pytest.mark.parametrize("strategy", ["edge", "ell"])
+@pytest.mark.parametrize("w,delta", [(10, 10), (10, 5), (13, 13), (1, 1)])
+def test_path_distances_on_exact_boundaries(strategy, w, delta):
+    """Every distance is a multiple of Δ (w divisible by Δ): one vertex
+    per bucket edge, each settled exactly once."""
+    k = 12
+    g = _path_graph(k, w)
+    res = delta_stepping(
+        g, 0, DeltaConfig(delta=delta, strategy=strategy, pred_mode="none"))
+    np.testing.assert_array_equal(
+        np.asarray(res.dist), np.arange(k + 1) * w)
+    assert not bool(res.overflow)
+    # w == Δ: bucket b holds exactly vertex b; the engine must still
+    # process k+1 distinct buckets, not merge boundary vertices
+    if w == delta:
+        assert int(res.outer_iters) == k + 1
+
+
+@pytest.mark.parametrize("delta", [1, 2, 4])
+def test_unit_lattice_boundary_sweep(delta):
+    """Unit-weight lattice: every distance is an exact multiple of 1 and
+    of any Δ dividing the hop count — the all-boundary stress the tuner's
+    Δ grid hits; all Δ values must agree with Dijkstra exactly."""
+    g = square_lattice(9, weighted=False)
+    dref, _ = dijkstra(g, 0)
+    for strategy in ("edge", "ell"):
+        res = delta_stepping(
+            g, 0,
+            DeltaConfig(delta=delta, strategy=strategy, pred_mode="none"))
+        np.testing.assert_array_equal(np.asarray(res.dist, np.int64), dref)

@@ -8,9 +8,7 @@ import textwrap
 
 import jax
 import numpy as np
-import pytest
-
-from repro.core import DeltaConfig, delta_stepping, dijkstra
+from repro.core import dijkstra
 from repro.core.distributed import DistDeltaConfig, build_distributed_solver
 from repro.graphs import partition_edges, watts_strogatz
 

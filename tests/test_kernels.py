@@ -1,7 +1,6 @@
 """Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp
 oracle, swept over shapes/dtypes/parameters, plus end-to-end use of the
 grid kernel inside the game-map solver against Dijkstra."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

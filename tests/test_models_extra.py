@@ -10,7 +10,6 @@ import textwrap
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import LMConfig
 from repro.models.embedding import embedding_bag, multi_hot_lookup
