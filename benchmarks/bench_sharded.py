@@ -1,0 +1,48 @@
+"""Mesh-sharded backends vs their single-device twins (DESIGN.md §9).
+
+Times one SSSP solve per backend on the small-world family: ``edge`` vs
+``sharded_edge`` and ``ell`` vs ``sharded_ell``, plus a batched
+multi-source row through the sharded engine. Shard width is every
+local device — 1 on plain CPU CI (which still exercises the full
+shard_map + all-reduce-min machinery, so the gate tracks its overhead);
+run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for
+multi-shard numbers (the derived column records the width either way).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, scaled, time_fn
+from repro.core import DeltaConfig, DeltaSteppingSolver
+from repro.graphs import watts_strogatz
+
+
+def main():
+    g = watts_strogatz(scaled(10_000), 12, 1e-2, seed=0)
+    shards = jax.device_count()
+    tag = f"shards={shards}"
+    times = {}
+    for strategy in ("edge", "sharded_edge", "ell", "sharded_ell"):
+        solver = DeltaSteppingSolver(
+            g, DeltaConfig(delta=10, strategy=strategy, pred_mode="none"))
+        t = time_fn(lambda: solver.solve(0).dist, reps=3)
+        times[strategy] = t
+        derived = tag if strategy.startswith("sharded") else ""
+        if strategy == "sharded_edge":
+            derived += f";vs_edge={times['edge'] / t:.2f}"
+        elif strategy == "sharded_ell":
+            derived += f";vs_ell={times['ell'] / t:.2f}"
+        row(f"sharded/{strategy}/solve", t, derived)
+    # batched multi-source through the sharded engine (vmapped shard_map)
+    batch = 8
+    srcs = np.arange(batch, dtype=np.int32)
+    solver = DeltaSteppingSolver(
+        g, DeltaConfig(delta=10, strategy="sharded_edge", pred_mode="none"))
+    t_bat = time_fn(lambda: solver.solve_many(srcs).dist, reps=2)
+    row("sharded/sharded_edge/batched", t_bat / batch,
+        f"{tag};batch={batch}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,9 +11,8 @@ representative p=1e-2, k=12 instance next to the hand-picked Δ=10 row.
 """
 from __future__ import annotations
 
-import time
 
-from benchmarks.common import row, scaled, time_fn, tuned_solver, tuned_tag
+from benchmarks.common import row, scaled, time_fn, time_host, tuned_solver, tuned_tag
 from repro.core import DeltaConfig, DeltaSteppingSolver, dijkstra
 from repro.graphs import watts_strogatz
 
@@ -26,13 +25,14 @@ def main():
                 solver = DeltaSteppingSolver(
                     g, DeltaConfig(delta=10, pred_mode="none"))
                 t_ds = time_fn(lambda: solver.solve(0).dist, reps=2)
-                t0 = time.perf_counter()
-                dijkstra(g, 0)
-                t_dj = time.perf_counter() - t0
+                t_dj = time_host(dijkstra, g, 0)
                 tag = f"smallworld_p{p:g}_k{k}_n{n}"
                 row(f"tab2/{tag}/delta", t_ds,
                     f"speedup_vs_dijkstra={t_dj / t_ds:.2f}")
-                row(f"tab2/{tag}/dijkstra", t_dj, "")
+                # oracle reference, not engine code: host-side heapq is
+                # the suite's noisiest timing (races XLA compile threads
+                # in-process) and only exists for the derived ratio
+                row(f"tab2/{tag}/dijkstra", t_dj, "", gate=False)
                 if p == 1e-2 and k == 12 and n == scaled(10_000):
                     rec, tuned = tuned_solver(g)
                     t_tu = time_fn(lambda: tuned.solve(0).dist, reps=2)

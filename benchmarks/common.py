@@ -43,6 +43,20 @@ def time_fn(fn, *args, reps: int = 3, warmup: int = 1):
     return float(np.median(times))
 
 
+def time_host(fn, *args, reps: int = 3):
+    """Median wall time of a host-side (non-jax) callable. The single
+    un-warmed measurement the oracle rows used before is the gate's
+    noisiest input — one GC pause or a racing XLA compile thread reads
+    as a 2x 'regression' — so oracle baselines get the same median-of-
+    reps discipline as the jax rows."""
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
 def row(name: str, seconds: float, derived: str = "", gate: bool = True):
     """Emit one CSV row and record it for the JSON perf record.
     ``gate=False`` marks informational rows (e.g. one-time tuning-search

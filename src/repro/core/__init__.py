@@ -5,8 +5,11 @@ from repro.core.backends import (
     GridPallasBackend,
     PallasEllBackend,
     RelaxBackend,
+    ShardedEdgeBackend,
+    ShardedEllBackend,
     edge_sweep,
     make_backend,
+    resolve_n_shards,
     scan_bucket,
 )
 from repro.core.delta_stepping import (
@@ -16,7 +19,12 @@ from repro.core.delta_stepping import (
     delta_stepping,
     pred_argmin,
 )
-from repro.core.ref import bellman_ford, dijkstra, validate_pred_tree
+from repro.core.ref import (
+    bellman_ford,
+    dijkstra,
+    validate_pred_tree,
+    walk_pred_tree,
+)
 
 __all__ = [
     "DeltaConfig",
@@ -30,9 +38,13 @@ __all__ = [
     "EllBackend",
     "PallasEllBackend",
     "GridPallasBackend",
+    "ShardedEdgeBackend",
+    "ShardedEllBackend",
     "make_backend",
+    "resolve_n_shards",
     "scan_bucket",
     "dijkstra",
     "bellman_ford",
     "validate_pred_tree",
+    "walk_pred_tree",
 ]

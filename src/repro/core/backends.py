@@ -13,6 +13,13 @@ outer/inner loop driver (``core.delta_stepping``) hosts every strategy:
   Pallas kernel with bucket bookkeeping fused by ``kernels/bucket_scan``;
   on game-map (occupancy-grid) instances the relaxation is instead the
   ``kernels/grid_relax`` min-plus stencil.
+* ``sharded_edge`` / ``sharded_ell`` — SPMD variants of the first two:
+  edges (or ELL row blocks) are partitioned across a 1-D device mesh
+  (``graphs.partition``), each sweep runs per-shard under ``shard_map``
+  (through ``compat``) and merges candidates with an all-reduce min.
+  The merge reduces whole tent *words* — in ``packed`` mode the int64
+  (cost, pred) word — so the sharded run is bitwise identical to the
+  single-device engine, not merely distance-equal (DESIGN.md §9).
 
 A backend provides two traced operations over solver state:
 
@@ -39,8 +46,12 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec
 
+from repro import compat
 from repro.core import pack as packing
+from repro.graphs.partition import ELLPartition, partition_edges, partition_ell
 from repro.graphs.structures import (
     COOGraph,
     ELLGraph,
@@ -106,20 +117,49 @@ def edge_candidates(d_src, f_src, w, *, delta: int, light: bool):
     return cand, active & phase
 
 
-def edge_sweep(tent, frontier, src, dst, w, *, delta: int, light: bool,
-               packed: bool):
-    """One relaxation sweep over an edge array, masked by frontier[src]
-    and the light/heavy phase. Padding edges may carry src == n (sentinel):
-    out-of-range gathers are filled inactive, out-of-range scatters drop —
-    the TPU version of the paper's 'benign garbage writes' argument."""
-    d = dist_of(tent, packed)
+def edge_relax_words(d, frontier, src, dst, w, *, delta: int, light: bool,
+                     packed: bool):
+    """Candidate words of one edge-array relaxation: frontier/phase mask,
+    C4 early filter against the destination gather, word packing. The
+    single shared generation path of the single-device ``edge_sweep``
+    and the per-shard ``ShardedEdgeBackend`` sweep — callers differ only
+    in the scatter target (tent vs a per-shard merge buffer), which is
+    what keeps them bitwise interchangeable (DESIGN.md §9). Padding
+    edges may carry src == n (sentinel): out-of-range gathers are filled
+    inactive — the TPU version of the paper's 'benign garbage writes'
+    argument."""
     f = jnp.take(frontier, src, mode="fill", fill_value=False)
     d_src = jnp.take(d, src, mode="fill", fill_value=INF32)
     cand, ok = edge_candidates(d_src, f, w, delta=delta, light=light)
     d_dst = jnp.take(d, dst, mode="fill", fill_value=INF32)
     ok = ok & (cand < d_dst)              # C4: early filter before scatter
-    words = candidate_words(cand, src, ok, packed)
+    return candidate_words(cand, src, ok, packed)
+
+
+def edge_sweep(tent, frontier, src, dst, w, *, delta: int, light: bool,
+               packed: bool):
+    """One relaxation sweep over an edge array; out-of-range scatters
+    (padding edges) drop."""
+    words = edge_relax_words(dist_of(tent, packed), frontier, src, dst, w,
+                             delta=delta, light=light, packed=packed)
     return tent.at[dst].min(words, mode="drop")
+
+
+def ell_relax_words(d, fidx, rows_n, rows_w, *, n: int, packed: bool):
+    """Candidate words of gathered ELL rows (``rows_n``/``rows_w``
+    (cap, D), global neighbor ids). ``fidx`` int32[cap] holds the
+    *global* vertex ids of the compacted rows with a >= n sentinel for
+    padding slots (gathers INF). Shared by the single-device
+    ``ell_sweep`` and the per-shard ``ShardedEllBackend`` sweep — same
+    bitwise-interchangeability contract as ``edge_relax_words``."""
+    d_f = jnp.take(d, fidx, mode="fill", fill_value=INF32)
+    valid = (rows_n < n) & (rows_w < INF32) & (d_f[:, None] < INF32)
+    cand = (jnp.where(valid, d_f[:, None], 0)
+            + jnp.where(valid, rows_w, 0))
+    d_dst = jnp.take(d, rows_n, mode="fill", fill_value=INF32)
+    ok = valid & (cand < d_dst)
+    src_ids = jnp.broadcast_to(fidx[:, None], rows_n.shape)
+    return candidate_words(cand, src_ids, ok, packed)
 
 
 def ell_sweep(tent, fidx, nbr, w_ell, *, n: int, packed: bool):
@@ -128,14 +168,7 @@ def ell_sweep(tent, fidx, nbr, w_ell, *, n: int, packed: bool):
     d = dist_of(tent, packed)
     rows_n = nbr[fidx]                      # (cap, D); row n is all-sentinel
     rows_w = w_ell[fidx]
-    d_f = jnp.take(d, fidx, mode="fill", fill_value=INF32)
-    valid = (rows_n < n) & (rows_w < INF32) & (d_f[:, None] < INF32)
-    cand = (jnp.where(valid, d_f[:, None], 0)
-            + jnp.where(valid, rows_w, 0))
-    d_dst = jnp.take(d, rows_n, mode="fill", fill_value=INF32)
-    ok = valid & (cand < d_dst)
-    src_ids = jnp.broadcast_to(fidx[:, None], rows_n.shape)
-    words = candidate_words(cand, src_ids, ok, packed)
+    words = ell_relax_words(d, fidx, rows_n, rows_w, n=n, packed=packed)
     return tent.at[rows_n.ravel()].min(words.ravel(), mode="drop")
 
 
@@ -314,6 +347,148 @@ class GridPallasBackend(_PallasScanMixin, RelaxBackend):
         return out.reshape(-1), jnp.zeros((), bool)
 
 
+# ---------------------------------------------------------------------------
+# mesh-sharded backends (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+_SHARD_AXIS = "shard"
+
+
+def resolve_n_shards(n_shards) -> int:
+    """Concrete shard count for a config's ``n_shards`` (None = every
+    local device). Bounded by the device count: ``shard_map`` needs one
+    device per mesh slot."""
+    ndev = jax.device_count()
+    if n_shards is None:
+        return ndev
+    if not 1 <= n_shards <= ndev:
+        raise ValueError(
+            f"n_shards={n_shards} needs 1..{ndev} devices (run under "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=K to fake "
+            "a K-device host mesh)")
+    return int(n_shards)
+
+
+def _inf_word(packed: bool):
+    return jnp.asarray(packing.INF_PACKED, jnp.int64) if packed \
+        else jnp.asarray(INF32, jnp.int32)
+
+
+class _ShardedMixin:
+    """Shared shard_map plumbing: a 1-D mesh over ``n_shards`` devices,
+    built at trace time (meshes are host objects, not pytree leaves).
+    Consumers declare the static field ``n_shards``."""
+
+    def _mesh(self):
+        return compat.make_mesh((self.n_shards,), (_SHARD_AXIS,))
+
+    def _shard_map(self, body, n_sharded_args, n_outs):
+        spec = PartitionSpec(_SHARD_AXIS)
+        rep = PartitionSpec()
+        return compat.shard_map(
+            body, mesh=self._mesh(),
+            in_specs=(rep, rep) + (spec,) * n_sharded_args,
+            out_specs=(rep,) * n_outs if n_outs > 1 else rep,
+            check_vma=False)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedEdgeBackend(_ShardedMixin, RelaxBackend):
+    """Edge-centric strategy over an SPMD mesh: every device sweeps its
+    own edge shard (``graphs.partition.partition_edges`` row ownership)
+    into a full-width candidate buffer, then the buffers are merged with
+    an all-reduce min and folded into the replicated tent. Min is
+    associative and commutative on the tent words — int32 distances or
+    packed int64 (cost, pred) — so the result is bitwise identical to
+    the single-device ``edge`` backend for any shard count: the paper's
+    CAS loop (C2) becomes a deterministic collective (DESIGN.md §9)."""
+
+    src: jax.Array                        # int32[n_shards, E_pad]
+    dst: jax.Array
+    w: jax.Array
+    delta: int = _static()
+    n: int = _static()
+    n_shards: int = _static()
+
+    @classmethod
+    def build(cls, graph: COOGraph, cfg) -> "ShardedEdgeBackend":
+        shards = resolve_n_shards(cfg.n_shards)
+        part = partition_edges(graph, shards)
+        return cls(part.src, part.dst, part.w, cfg.delta, graph.n_nodes,
+                   shards)
+
+    def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
+        delta, n = self.delta, self.n
+
+        def body(tent_r, mask_r, src, dst, w):
+            src, dst, w = src[0], dst[0], w[0]    # shed the shard dim
+            words = edge_relax_words(dist_of(tent_r, packed), mask_r,
+                                     src, dst, w, delta=delta, light=light,
+                                     packed=packed)
+            buf = jnp.full((n,), _inf_word(packed)).at[dst].min(
+                words, mode="drop")
+            return jnp.minimum(tent_r, lax.pmin(buf, _SHARD_AXIS))
+
+        tent = self._shard_map(body, 3, 1)(tent, mask, self.src, self.dst,
+                                           self.w)
+        return tent, jnp.zeros((), bool)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedEllBackend(_ShardedMixin, RelaxBackend):
+    """Frontier-centric strategy over an SPMD mesh: each device compacts
+    the frontier slice of its owned vertex range and expands its local
+    light/heavy ELL row block (``graphs.partition.partition_ell``), then
+    candidates merge with the same all-reduce min word schedule as
+    ``sharded_edge``. ``cap`` is the *per-shard* compaction capacity
+    (default: the full owned range, which cannot overflow); the overflow
+    flag is any-reduced across shards."""
+
+    part: ELLPartition
+    delta: int = _static()
+    n: int = _static()
+    n_shards: int = _static()
+    cap: int = _static()
+
+    @classmethod
+    def build(cls, graph: COOGraph, cfg) -> "ShardedEllBackend":
+        shards = resolve_n_shards(cfg.n_shards)
+        part = partition_ell(graph, shards, cfg.delta)
+        cap = min(cfg.frontier_cap or part.shard_nodes, part.shard_nodes)
+        return cls(part, cfg.delta, graph.n_nodes, shards, cap)
+
+    def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
+        part = self.part
+        nbr = part.light_nbr if light else part.heavy_nbr
+        w_ell = part.light_w if light else part.heavy_w
+        n, s_nodes, cap = self.n, part.shard_nodes, self.cap
+        n_pad = self.n_shards * s_nodes
+
+        def body(tent_r, mask_r, nbr_s, w_s):
+            nbr_s, w_s = nbr_s[0], w_s[0]         # (S + 1, D)
+            base = lax.axis_index(_SHARD_AXIS) * s_nodes
+            maskp = jnp.pad(mask_r, (0, n_pad - n))
+            local = lax.dynamic_slice_in_dim(maskp, base, s_nodes)
+            lidx = jnp.nonzero(local, size=cap,
+                               fill_value=s_nodes)[0].astype(jnp.int32)
+            over = local.sum() > cap
+            # global ids of the compacted rows; sentinel slots gather INF
+            gidx = jnp.where(lidx < s_nodes, lidx + base, n).astype(jnp.int32)
+            rows_n = nbr_s[lidx]                  # (cap, D), global ids
+            rows_w = w_s[lidx]
+            words = ell_relax_words(dist_of(tent_r, packed), gidx,
+                                    rows_n, rows_w, n=n, packed=packed)
+            buf = jnp.full((n,), _inf_word(packed)).at[rows_n.ravel()].min(
+                words.ravel(), mode="drop")
+            tent_out = jnp.minimum(tent_r, lax.pmin(buf, _SHARD_AXIS))
+            over_all = lax.pmax(over.astype(jnp.int32), _SHARD_AXIS) > 0
+            return tent_out, over_all
+
+        return self._shard_map(body, 2, 2)(tent, mask, nbr, w_ell)
+
+
 def make_backend(graph: COOGraph, cfg, free_mask=None) -> RelaxBackend:
     """Route a (graph, config) pair to its backend. ``free_mask`` marks
     the game-map graph class: under ``strategy='pallas'`` it selects the
@@ -328,6 +503,10 @@ def make_backend(graph: COOGraph, cfg, free_mask=None) -> RelaxBackend:
         return EdgeBackend.build(graph, cfg)
     if cfg.strategy == "ell":
         return EllBackend.build(graph, cfg)
+    if cfg.strategy == "sharded_edge":
+        return ShardedEdgeBackend.build(graph, cfg)
+    if cfg.strategy == "sharded_ell":
+        return ShardedEllBackend.build(graph, cfg)
     assert cfg.strategy == "pallas", cfg.strategy
     if free_mask is not None:
         if cfg.pred_mode == "packed":

@@ -57,16 +57,22 @@ class DeltaConfig:
     """Configuration of the Δ-stepping engine.
 
     delta        — bucket width Δ (paper's tuning parameter, Fig. 1).
-    strategy     — 'edge' | 'ell' | 'pallas' relaxation backend
-                   (see module doc / DESIGN.md §3).
+    strategy     — 'edge' | 'ell' | 'pallas' | 'sharded_edge' |
+                   'sharded_ell' relaxation backend (see module doc /
+                   DESIGN.md §3, §9).
     pred_mode    — 'none' | 'argmin' | 'packed' predecessor tracking.
     frontier_cap — 'ell'/'pallas' only: static capacity of the compacted
                    frontier (defaults to |V|; smaller saves work if an
                    upper bound on per-bucket frontier size is known —
                    the ``overflow`` result flag reports violations).
+                   For 'sharded_ell' the cap is *per shard* (defaults to
+                   the owned vertex range, which cannot overflow).
     interpret    — 'pallas' only: run kernels in interpret mode (CPU).
     grid_costs   — 'pallas' on game maps: (straight, diagonal) move
                    costs of the occupancy-grid stencil (paper §4).
+    n_shards     — 'sharded_*' only: width of the 1-D device mesh the
+                   relaxation is partitioned over (None = every local
+                   device; DESIGN.md §9).
     """
 
     delta: int = 10
@@ -75,14 +81,18 @@ class DeltaConfig:
     frontier_cap: Optional[int] = None
     interpret: bool = False
     grid_costs: Tuple[int, int] = (10, 14)
+    n_shards: Optional[int] = None
 
     def __post_init__(self):
-        if self.strategy not in ("edge", "ell", "pallas"):
+        if self.strategy not in ("edge", "ell", "pallas",
+                                 "sharded_edge", "sharded_ell"):
             raise ValueError(f"unknown strategy {self.strategy!r}")
         if self.pred_mode not in ("none", "argmin", "packed"):
             raise ValueError(f"unknown pred_mode {self.pred_mode!r}")
         if self.delta < 1:
             raise ValueError("delta must be >= 1")
+        if self.n_shards is not None and self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
 
 
 class SSSPResult(NamedTuple):
@@ -107,6 +117,31 @@ def _require_x64():
 # ---------------------------------------------------------------------------
 # the unified loop driver — generic over RelaxBackend and vmap-batchable
 # ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_one(backend: RelaxBackend, source, *, n: int, packed: bool):
+    """Jitted single-source driver. Module-level so the compile cache is
+    shared across ``DeltaSteppingSolver`` instances: the backend is a
+    pytree *argument* whose static fields (strategy class, Δ, caps) are
+    part of the cache key, so same-shaped solvers never recompile."""
+    return _run_backend(backend, source, n=n, packed=packed)
+
+
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_many_vmapped(backend: RelaxBackend, sources, *, n: int,
+                      packed: bool):
+    """Jitted batched multi-source driver (vmapped state)."""
+    return jax.vmap(
+        lambda s: _run_backend(backend, s, n=n, packed=packed))(sources)
+
+
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_many_seq(backend: RelaxBackend, sources, *, n: int, packed: bool):
+    """Batched driver for backends without a batching rule
+    (``pallas_call`` with scalar-prefetch grids): in-program lax.map."""
+    return lax.map(
+        lambda s: _run_backend(backend, s, n=n, packed=packed), sources)
+
 
 def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool):
     """Outer/inner Δ-stepping loop (paper Alg. 1) over one backend.
@@ -235,16 +270,13 @@ class DeltaSteppingSolver:
             _require_x64()
         self.backend = make_backend(graph, config, free_mask=free_mask)
         packed = config.pred_mode == "packed"
-        run = partial(_run_backend, n=graph.n_nodes, packed=packed)
-        # the backend is a pytree jit *argument*: solvers over same-shaped
-        # graphs hit the same compile cache entry.
-        self._run1 = jax.jit(lambda b, s: run(b, s))
-        if self.backend.supports_vmap:
-            self._run_many = jax.jit(
-                lambda b, ss: jax.vmap(lambda s: run(b, s))(ss))
-        else:  # pallas_call has no batching rule: sequential in-program map
-            self._run_many = jax.jit(
-                lambda b, ss: lax.map(lambda s: run(b, s), ss))
+        # module-level jitted drivers (the backend is a pytree argument):
+        # every solver over a same-shaped graph + same static config hits
+        # the same compile cache entry, across solver instances.
+        self._run1 = partial(_run_one, n=graph.n_nodes, packed=packed)
+        many = (_run_many_vmapped if self.backend.supports_vmap
+                else _run_many_seq)
+        self._run_many = partial(many, n=graph.n_nodes, packed=packed)
 
     def solve(self, source: int) -> SSSPResult:
         src_arr = jnp.asarray(source, jnp.int32)

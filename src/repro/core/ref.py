@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.graphs.structures import COOGraph, INF32
 
-__all__ = ["dijkstra", "bellman_ford", "validate_pred_tree"]
+__all__ = ["dijkstra", "bellman_ford", "validate_pred_tree",
+           "walk_pred_tree"]
 
 
 def _to_adj(g: COOGraph):
@@ -96,4 +97,44 @@ def validate_pred_tree(g: COOGraph, source: int, dist: np.ndarray,
             return False
         if dist[p] + edge_w[key] != dist[v]:
             return False
+    return True
+
+
+def walk_pred_tree(g: COOGraph, source: int, dist: np.ndarray,
+                   pred: np.ndarray) -> bool:
+    """Stronger check than :func:`validate_pred_tree`: *walk* the pred
+    chain of every reachable vertex all the way to the source — the
+    chains must be acyclic (a tree rooted at the source, <= n hops) and
+    the accumulated edge weights along each chain must reproduce
+    ``dist`` exactly. This is the global invariant a torn (cost, pred)
+    write (the paper's C3 worry) or a stale-parent race (C4) would
+    break while leaving every *individual* edge locally consistent."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w).astype(np.int64)
+    edge_w: dict[tuple[int, int], int] = {}
+    for s, d, ww in zip(src, dst, w):
+        key = (int(s), int(d))
+        edge_w[key] = min(edge_w.get(key, 1 << 62), int(ww))
+    n = g.n_nodes
+    for v in range(n):
+        if v == source or dist[v] >= int(INF32):
+            continue
+        acc = 0
+        u = v
+        for _ in range(n):                      # > n hops = a cycle
+            p = int(pred[u])
+            if p < 0:
+                return False                    # chain broke off-tree
+            key = (p, u)
+            if key not in edge_w:
+                return False                    # pred edge not in graph
+            acc += edge_w[key]
+            u = p
+            if u == source:
+                break
+        else:
+            return False                        # never reached the source
+        if acc != int(dist[v]):
+            return False                        # weights don't reproduce dist
     return True

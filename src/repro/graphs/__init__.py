@@ -21,7 +21,12 @@ from repro.graphs.generators import (
     square_lattice,
     watts_strogatz,
 )
-from repro.graphs.partition import VertexPartition, partition_edges
+from repro.graphs.partition import (
+    ELLPartition,
+    VertexPartition,
+    partition_edges,
+    partition_ell,
+)
 from repro.graphs.sampler import sample_khop
 
 __all__ = [
@@ -37,6 +42,8 @@ __all__ = [
     "square_lattice",
     "random_graph",
     "VertexPartition",
+    "ELLPartition",
     "partition_edges",
+    "partition_ell",
     "sample_khop",
 ]

@@ -1,12 +1,21 @@
-"""Vertex partitioning for SPMD Δ-stepping (DESIGN.md §4).
+"""Vertex partitioning for SPMD Δ-stepping (DESIGN.md §4, §9).
 
 The paper distributes bucket entries over OpenMP threads with static
 scheduling; we map that to a static 1-D partition of the vertex set over
-the ``model`` mesh axis. Each shard owns a contiguous vertex range plus
-every outgoing edge of its range (CSR row ownership). Shards are padded
-to a common edge count so the result stacks into dense arrays that
+a mesh axis. Each shard owns a contiguous vertex range plus every
+outgoing edge of its range (CSR row ownership). Shards are padded to a
+common edge count so the result stacks into dense arrays that
 ``shard_map`` can consume — padding edges use the sentinel source
 ``n_nodes`` which is never in any frontier.
+
+Two stacked layouts:
+
+* ``partition_edges`` → ``VertexPartition``: flat per-shard edge arrays
+  (the ``sharded_edge`` backend and ``core.distributed`` consume this);
+* ``partition_ell``   → ``ELLPartition``: per-shard light/heavy ELL row
+  blocks over the owned vertex range (the ``sharded_ell`` backend
+  consumes this — the paper's preprocessed light/heavy split, Alg. 1
+  lines 3–5, partitioned by row owner).
 """
 from __future__ import annotations
 
@@ -16,7 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.graphs.structures import COOGraph, INF32
+from repro.graphs.structures import (
+    COOGraph,
+    INF32,
+    coo_to_csr,
+    light_heavy_split,
+)
 
 
 @jax.tree_util.register_dataclass
@@ -76,4 +90,63 @@ def partition_edges(g: COOGraph, n_shards: int) -> VertexPartition:
         n_nodes=n,
         n_shards=n_shards,
         shard_nodes=int(shard_nodes),
+    )
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ELLPartition:
+    """Stacked per-shard light/heavy ELL row blocks.
+
+    ``light_nbr``/``light_w`` int32[n_shards, shard_nodes + 1, light_deg]
+    (``heavy_*`` likewise): row ``r`` of shard ``i`` holds the light
+    (heavy) outgoing edges of global vertex ``i * shard_nodes + r`` with
+    *global* neighbor ids. Invalid slots — padding columns, rows past
+    ``n_nodes``, and the sentinel row ``shard_nodes`` — carry neighbor
+    ``n_nodes`` and weight ``INF32``, so gathers through them never win
+    a scatter-min (the same benign-garbage trick as ``ELLGraph``).
+    """
+
+    light_nbr: jax.Array
+    light_w: jax.Array
+    heavy_nbr: jax.Array
+    heavy_w: jax.Array
+    n_nodes: int = dataclasses.field(metadata=dict(static=True))
+    n_shards: int = dataclasses.field(metadata=dict(static=True))
+    shard_nodes: int = dataclasses.field(metadata=dict(static=True))
+    light_deg: int = dataclasses.field(metadata=dict(static=True))
+    heavy_deg: int = dataclasses.field(metadata=dict(static=True))
+
+
+def _stack_ell_blocks(csr, n_shards: int, shard_nodes: int):
+    """One CSR split → stacked per-shard ELL blocks (numpy host-side)."""
+    row_ptr = np.asarray(csr.row_ptr)
+    col = np.asarray(csr.col)
+    w = np.asarray(csr.w)
+    n = csr.n_nodes
+    deg = row_ptr[1:] - row_ptr[:-1]
+    max_deg = max(int(deg.max()) if deg.size else 0, 1)
+    nbr = np.full((n_shards, shard_nodes + 1, max_deg), n, dtype=np.int32)
+    ww = np.full((n_shards, shard_nodes + 1, max_deg), INF32, dtype=np.int32)
+    if col.size:
+        slot = np.arange(col.shape[0], dtype=np.int64) \
+            - row_ptr[:-1].repeat(deg)
+        v = np.arange(n, dtype=np.int64).repeat(deg)
+        nbr[v // shard_nodes, v % shard_nodes, slot] = col
+        ww[v // shard_nodes, v % shard_nodes, slot] = w
+    return jnp.asarray(nbr), jnp.asarray(ww), max_deg
+
+
+def partition_ell(g: COOGraph, n_shards: int, delta: int) -> ELLPartition:
+    """Static 1-D row partition of the light/heavy ELL blocks: shard i
+    owns the ELL rows of vertices [i*S, (i+1)*S). Host-side numpy."""
+    csr = coo_to_csr(g)
+    light, heavy = light_heavy_split(csr, delta)
+    shard_nodes = -(-g.n_nodes // n_shards)  # ceil
+    l_nbr, l_w, l_deg = _stack_ell_blocks(light, n_shards, shard_nodes)
+    h_nbr, h_w, h_deg = _stack_ell_blocks(heavy, n_shards, shard_nodes)
+    return ELLPartition(
+        light_nbr=l_nbr, light_w=l_w, heavy_nbr=h_nbr, heavy_w=h_w,
+        n_nodes=g.n_nodes, n_shards=n_shards, shard_nodes=int(shard_nodes),
+        light_deg=l_deg, heavy_deg=h_deg,
     )

@@ -27,9 +27,17 @@ def _serve_sssp(args):
     g = watts_strogatz(args.nodes, args.degree, 1e-2, seed=0)
     t0 = time.perf_counter()
     # --tune = measured search; --tune-cache alone = cache hit or the
-    # zero-measurement estimator (same semantics as launch.sssp)
+    # zero-measurement estimator (same semantics as launch.sssp). The
+    # concrete config is always the tuning *base*, so --strategy /
+    # --shards survive tuning as non-searched fields (SSSPServer
+    # resolves whenever tune inputs are present).
     auto = args.tune or args.tune_cache is not None
-    config = "auto" if auto else DeltaConfig(delta=args.delta)
+    config = DeltaConfig(delta=args.delta, strategy=args.strategy,
+                         n_shards=args.shards)
+    if not auto and args.strategy.startswith("sharded"):
+        from repro.core import resolve_n_shards
+        print(f"[serve] mesh-sharded relaxation over "
+              f"{resolve_n_shards(args.shards)} device(s)")
     srv = SSSPServer(g, config, batch_size=args.batch, tune=args.tune,
                      tune_cache=args.tune_cache)
     if auto:
@@ -98,6 +106,13 @@ def main():
     ap.add_argument("--nodes", type=int, default=20_000)
     ap.add_argument("--degree", type=int, default=12)
     ap.add_argument("--delta", type=int, default=10)
+    ap.add_argument("--strategy", default="edge",
+                    choices=["edge", "ell", "sharded_edge", "sharded_ell"],
+                    help="SSSP mode: relaxation backend (sharded_* = "
+                         "mesh-sharded engine, DESIGN.md §9)")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="SSSP mode, sharded_* strategies: mesh width "
+                         "(default: every local device)")
     ap.add_argument("--batch", type=int, default=8,
                     help="SSSP microbatch size (solve_many lanes)")
     ap.add_argument("--tune", action="store_true",

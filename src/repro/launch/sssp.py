@@ -10,7 +10,15 @@ XLA_FLAGS=--xla_force_host_platform_device_count=N) runs the
 distributed shard_map engine on an (sources × N_model) mesh.
 ``--strategy pallas`` routes relaxation through the Pallas kernels
 (add ``--interpret`` off-TPU); on ``--graph gamemap`` that selects the
-grid-stencil kernel.
+grid-stencil kernel. ``--strategy sharded_edge`` / ``sharded_ell``
+selects the mesh-sharded first-class backends (DESIGN.md §9) —
+relaxation partitioned over ``--shards`` devices (default: all) inside
+the unified engine, composing with ``--sources`` batching and
+``--tune``:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m repro.launch.sssp --graph rmat \\
+      --nodes 100000 --strategy sharded_edge --shards 8 --verify
 
 ``--tune`` replaces the hand-picked ``--delta``/``--strategy`` with the
 measured (Δ, backend, packing) search (repro.tune, DESIGN.md §7);
@@ -33,7 +41,11 @@ def main():
     ap.add_argument("--p", type=float, default=1e-2)
     ap.add_argument("--delta", type=int, default=10)
     ap.add_argument("--strategy", default="edge",
-                    choices=["edge", "ell", "pallas"])
+                    choices=["edge", "ell", "pallas",
+                             "sharded_edge", "sharded_ell"])
+    ap.add_argument("--shards", type=int, default=None,
+                    help="sharded_* strategies: 1-D mesh width "
+                         "(default: every local device)")
     ap.add_argument("--interpret", action="store_true",
                     help="run pallas kernels in interpret mode (CPU)")
     ap.add_argument("--sources", type=int, default=1)
@@ -98,7 +110,8 @@ def main():
     else:
         from repro.core import DeltaConfig, DeltaSteppingSolver
         cfg = DeltaConfig(delta=args.delta, strategy=args.strategy,
-                          pred_mode="argmin", interpret=args.interpret)
+                          pred_mode="argmin", interpret=args.interpret,
+                          n_shards=args.shards)
         if args.tune or args.tune_cache:
             from repro.tune import resolve_config
             t0 = time.perf_counter()
@@ -112,6 +125,10 @@ def main():
                   f"({time.perf_counter() - t0:.1f}s to tune)")
         solver = DeltaSteppingSolver(
             g, cfg, free_mask=free if cfg.strategy == "pallas" else None)
+        if cfg.strategy.startswith("sharded"):
+            from repro.core import resolve_n_shards
+            print(f"[sssp] mesh-sharded relaxation over "
+                  f"{resolve_n_shards(cfg.n_shards)} device(s)")
         if len(sources) > 1:
             # batched multi-source path: one program for all sources
             solver.solve_many(sources)          # warm up / compile

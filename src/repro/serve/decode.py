@@ -161,8 +161,11 @@ class SSSPServer:
         config = config or DeltaConfig()
         if isinstance(config, str) and config != "auto":
             raise ValueError(f"unknown config string {config!r}")
-        if tune or isinstance(config, str):
+        if tune or tune_cache is not None or isinstance(config, str):
             from repro.tune import resolve_config
+            # a concrete config survives as the tuning *base*: its
+            # non-searched fields (pred_mode, n_shards, ...) carry into
+            # the tuned result instead of being silently dropped
             base = DeltaConfig() if isinstance(config, str) else config
             # sources=None: the query stream is unknown at load time, so
             # a tuning-chosen frontier cap is dropped up front (explicit

@@ -158,5 +158,13 @@ def run_with_restarts(make_trainer: Callable[[], Trainer],
         try:
             return trainer.run(), trainer
         except SimulatedFailure as e:
+            # drain the failed incarnation's in-flight async checkpoint
+            # before rebuilding: a submit() the trainer already accepted
+            # must be durable by the time the restart restores, or the
+            # resume races the background write thread (an in-process
+            # restart supervisor keeps the writer thread alive, so
+            # waiting is both possible and required)
+            if trainer.writer is not None:
+                trainer.writer.wait()
             print(f"[trainer] {e}; restarting ({attempt + 1})")
     raise RuntimeError("exceeded max restarts")

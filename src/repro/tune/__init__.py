@@ -29,6 +29,7 @@ from repro.tune.search import (
     TuningRecord,
     build_safe_solver,
     candidate_configs,
+    default_strategies,
     heuristic_record,
     resolve_config,
     tune,
@@ -40,6 +41,7 @@ __all__ = [
     "TuningRecord",
     "build_safe_solver",
     "candidate_configs",
+    "default_strategies",
     "estimate_delta",
     "fingerprint",
     "graph_stats",

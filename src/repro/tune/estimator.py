@@ -128,15 +128,24 @@ def fingerprint(stats: GraphStats) -> str:
     so isomorphic-in-distribution workloads share tuned records. The
     hop-radius term is log2-bucketed: graphs whose diameters differ by
     less than 2x share records, order-of-magnitude differences (the
-    Fig. 1 p-sweep regimes) do not."""
+    Fig. 1 p-sweep regimes) do not.
+
+    The mesh shape (local device count) is part of the key: the tuner's
+    search space includes the mesh-sharded backends (DESIGN.md §9), and
+    a winner measured on an 8-device mesh proves nothing about a
+    1-device host — records must not cross-contaminate across hardware
+    widths."""
     if stats.ecc0 < 0:
         raise ValueError(
             "stats were computed with probe_ecc=False — no cache key "
             "without the hop-radius term"
         )
+    import jax  # local: the estimator is otherwise host-side numpy only
+
     hist = ",".join(str(c) for c in stats.degree_hist)
     ecc = 0 if stats.ecc0 == 0 else 1 + int(np.log2(stats.ecc0))
     return (
-        f"v2:n={stats.n_nodes}:m={stats.n_edges}"
+        f"v3:n={stats.n_nodes}:m={stats.n_edges}"
         f":deg={hist}:w={stats.w_min}-{stats.w_max}:ecc={ecc}"
+        f":dev={jax.device_count()}"
     )

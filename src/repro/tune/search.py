@@ -68,16 +68,18 @@ class TuningRecord:
     source: str
     us_per_solve: Optional[float] = None
     trials: Tuple[Tuple[int, str, int, float], ...] = ()
+    n_shards: Optional[int] = None
 
     def to_config(self, base: Optional[DeltaConfig] = None) -> DeltaConfig:
-        """Concrete engine config: tuned (Δ, strategy, cap) over the
-        caller's base for everything else (pred_mode, interpret, ...)."""
+        """Concrete engine config: tuned (Δ, strategy, cap, mesh shape)
+        over the caller's base for everything else (pred_mode, ...)."""
         base = base if base is not None else DeltaConfig()
         return dataclasses.replace(
             base,
             delta=self.delta,
             strategy=self.strategy,
             frontier_cap=self.frontier_cap,
+            n_shards=self.n_shards if self.n_shards is not None else base.n_shards,
         )
 
     def to_json(self) -> dict:
@@ -89,6 +91,7 @@ class TuningRecord:
             "source": self.source,
             "us_per_solve": self.us_per_solve,
             "trials": [list(t) for t in self.trials],
+            "n_shards": self.n_shards,
         }
 
     @classmethod
@@ -106,6 +109,7 @@ class TuningRecord:
                 (int(a), str(b), int(c), float(t))
                 for a, b, c, t in d.get("trials", [])
             ),
+            n_shards=(None if d.get("n_shards") is None else int(d["n_shards"])),
         )
 
 
@@ -128,15 +132,32 @@ def heuristic_record(
     )
 
 
+def default_strategies() -> Tuple[str, ...]:
+    """The tuner's default strategy axis: the single-device backends
+    always, plus the mesh-sharded backends whenever the process actually
+    has a mesh to shard over (>1 local device) — the mesh shape itself
+    is pinned by the fingerprint's ``dev=`` term (DESIGN.md §9)."""
+    import jax
+
+    if jax.device_count() > 1:
+        return ("edge", "ell", "sharded_edge", "sharded_ell")
+    return ("edge", "ell")
+
+
 def candidate_configs(
     stats: GraphStats,
-    strategies: Sequence[str] = ("edge", "ell"),
+    strategies: Optional[Sequence[str]] = None,
     deltas: Optional[Sequence[int]] = None,
     cap_fractions: Sequence[float] = _CAP_FRACTIONS,
 ) -> list:
     """The (Δ, strategy, frontier_cap) grid the tuner searches. Edge
     strategy ignores packing (no compaction), so it contributes one
-    candidate per Δ; ELL-family strategies get one per cap fraction."""
+    candidate per Δ; ELL-family strategies get one per cap fraction.
+    The sharded strategies contribute one candidate per Δ at full mesh
+    width (``sharded_ell``'s per-shard buffer is already |V|/P wide —
+    fractional caps would mostly re-measure overflow rejections)."""
+    if strategies is None:
+        strategies = default_strategies()
     if deltas is None:
         est = estimate_delta(stats)
         deltas = sorted({max(1, int(round(est * f))) for f in _DELTA_FACTORS})
@@ -144,12 +165,12 @@ def candidate_configs(
     out = []
     for delta in deltas:
         for strat in strategies:
-            if strat == "edge":
-                out.append((delta, strat, None))
-            else:
+            if strat in ("ell", "pallas"):
                 for frac in cap_fractions:
                     cap = None if frac >= 1.0 else max(_MIN_CAP, int(n * frac))
                     out.append((delta, strat, cap))
+            else:
+                out.append((delta, strat, None))
     return out
 
 
@@ -222,7 +243,7 @@ def tune(
     base: Optional[DeltaConfig] = None,
     *,
     sources: Sequence[int] = (0,),
-    strategies: Sequence[str] = ("edge", "ell"),
+    strategies: Optional[Sequence[str]] = None,
     deltas: Optional[Sequence[int]] = None,
     cap_fractions: Sequence[float] = _CAP_FRACTIONS,
     cache=None,
@@ -234,6 +255,8 @@ def tune(
     ``base`` supplies the non-searched config fields (pred_mode is
     forced to ``'none'`` during measurement — predecessor recovery is
     off the timed path — and restored by ``TuningRecord.to_config``).
+    ``strategies=None`` searches ``default_strategies()``: the mesh-
+    sharded backends join the space whenever >1 device is present.
     ``cache`` (a ``TuningCache``-shaped object) is consulted before the
     search and updated — and saved — after it. ``measure_fn`` overrides
     the timing primitive (tests inject deterministic costs).
@@ -293,6 +316,13 @@ def tune(
         reps *= 2
 
     best_t, (delta, strat, cap) = timed[0]
+    if strat.startswith("sharded"):
+        # pin the mesh width the winner was actually measured on
+        from repro.core.backends import resolve_n_shards
+
+        shards = resolve_n_shards(base.n_shards)
+    else:
+        shards = None
     record = TuningRecord(
         fingerprint=fp,
         delta=delta,
@@ -304,6 +334,7 @@ def tune(
             (d, s, -1 if c is None else c, round(t * 1e6, 1))
             for (d, s, c), t in sorted(evidence.items(), key=lambda kv: kv[1])
         ),
+        n_shards=shards,
     )
     if cache is not None:
         cache.put(record)

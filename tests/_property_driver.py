@@ -1,0 +1,56 @@
+"""Shared property-test driver: hypothesis-driven when hypothesis is
+installed (the CI tier-1 install includes it via requirements-dev.txt,
+so property suites never skip there), deterministic seed sweep
+otherwise — the suites degrade to fewer examples, never to zero.
+
+Used by tests/test_differential.py and tests/test_property_sssp.py; the
+two files share this one implementation so a fix to the fallback
+seeding or the ``@given`` wrapping cannot silently diverge between
+them.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    st = None
+    HAVE_HYPOTHESIS = False
+
+
+def drive(max_examples: int, fallback_examples: int, strategy,
+          fallback_draw):
+    """Property-driver decorator.
+
+    ``strategy``      — callable ``st -> hypothesis strategy`` (built
+                        lazily so importing this module never needs
+                        hypothesis);
+    ``fallback_draw`` — callable ``rng -> one drawn value`` emulating
+                        the strategy with a seeded numpy Generator.
+    """
+    if HAVE_HYPOTHESIS:
+        def deco(fn):
+            return settings(max_examples=max_examples, deadline=None)(
+                given(strategy(st))(fn))
+        return deco
+
+    def deco(fn):
+        def run_sweep():
+            rng = np.random.default_rng(0)
+            for _ in range(fallback_examples):
+                fn(fallback_draw(rng))
+        run_sweep.__name__ = fn.__name__
+        run_sweep.__doc__ = fn.__doc__
+        return run_sweep
+    return deco
+
+
+class null_ctx:
+    """No-op context manager (stand-in for enable_x64 in non-packed
+    parametrizations)."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False

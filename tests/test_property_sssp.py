@@ -1,4 +1,4 @@
-"""Property-based tests (hypothesis) for the Δ-stepping engine.
+"""Property-based tests for the Δ-stepping engine.
 
 Invariants checked on arbitrary random digraphs:
   1. distances equal two independent oracles (heap Dijkstra, Bellman-Ford);
@@ -6,34 +6,41 @@ Invariants checked on arbitrary random digraphs:
      whenever dist[u] is finite;
   3. every finite distance is witnessed by a valid predecessor tree;
   4. the result is invariant to Δ and to the relaxation strategy.
+
+Hypothesis drives the parameter draws when installed (the CI tier-1
+install includes it via requirements-dev.txt, so these never skip in
+CI); without it the same properties run over a deterministic sweep of
+the identical parameter space (shared driver:
+tests/_property_driver.py, which replaced the old ``importorskip``).
 """
+from functools import partial
+
 import numpy as np
-import pytest
 
-pytest.importorskip("hypothesis")  # dev-only dep, see requirements-dev.txt
-from hypothesis import given, settings, strategies as st
-
+from _property_driver import drive
 from repro.core import (
     DeltaConfig,
     bellman_ford,
     delta_stepping,
     dijkstra,
     validate_pred_tree,
+    walk_pred_tree,
 )
 from repro.graphs import random_graph
 from repro.graphs.structures import INF32
 
-graph_params = st.tuples(
-    st.integers(min_value=2, max_value=60),      # n
-    st.integers(min_value=0, max_value=240),     # m
-    st.integers(min_value=0, max_value=2**31 - 1),  # seed
-    st.integers(min_value=1, max_value=40),      # delta
-    st.integers(min_value=1, max_value=25),      # max weight
-)
+# (n, m, seed, delta, max weight)
+_RANGES = ((2, 60), (0, 240), (0, 2**31 - 1), (1, 40), (1, 25))
+
+drive_params = partial(
+    drive,
+    strategy=lambda st: st.tuples(
+        *(st.integers(min_value=lo, max_value=hi) for lo, hi in _RANGES)),
+    fallback_draw=lambda rng: tuple(
+        int(rng.integers(lo, hi + 1)) for lo, hi in _RANGES))
 
 
-@settings(max_examples=60, deadline=None)
-@given(graph_params)
+@drive_params(max_examples=60, fallback_examples=12)
 def test_matches_both_oracles(params):
     n, m, seed, delta, w_hi = params
     g = random_graph(n, m, seed=seed, w_lo=1, w_hi=w_hi)
@@ -44,8 +51,7 @@ def test_matches_both_oracles(params):
     np.testing.assert_array_equal(d, bellman_ford(g, src))
 
 
-@settings(max_examples=40, deadline=None)
-@given(graph_params)
+@drive_params(max_examples=40, fallback_examples=8)
 def test_triangle_inequality_and_pred(params):
     n, m, seed, delta, w_hi = params
     g = random_graph(n, m, seed=seed, w_lo=1, w_hi=w_hi)
@@ -57,10 +63,13 @@ def test_triangle_inequality_and_pred(params):
     fin = d[es] < int(INF32)
     assert (d[ed][fin] <= d[es][fin] + ew[fin]).all()
     assert validate_pred_tree(g, src, d, np.asarray(res.pred))
+    # stronger: walk every pred chain to the source — acyclic, and the
+    # accumulated weights reproduce dist exactly (the C3/C4 torn-write
+    # class of bugs leaves edges locally consistent but breaks this)
+    assert walk_pred_tree(g, src, d, np.asarray(res.pred))
 
 
-@settings(max_examples=25, deadline=None)
-@given(graph_params)
+@drive_params(max_examples=25, fallback_examples=6)
 def test_strategy_equivalence(params):
     n, m, seed, delta, w_hi = params
     g = random_graph(n, m, seed=seed, w_lo=1, w_hi=w_hi)

@@ -73,6 +73,39 @@ def test_estimator_matches_paper_smallworld_pick():
     assert estimate_delta(graph_stats(g)) == 10
 
 
+def test_fingerprint_includes_mesh_width():
+    """DESIGN.md §9: the mesh-sharded backends are in the tuner's search
+    space, so the cache key must carry the device count — a sharded
+    winner measured on an 8-device mesh must not be served to a 1-device
+    host with the same graph."""
+    import jax
+    fp = fingerprint(graph_stats(watts_strogatz(200, 6, 0.05, seed=0)))
+    assert fp.endswith(f":dev={jax.device_count()}")
+
+
+def test_tuner_can_pick_sharded_winner():
+    """A planted sharded_edge winner comes back with the measured mesh
+    width pinned in the record, survives the JSON round trip, and turns
+    into an exact engine config."""
+    import jax
+    g = watts_strogatz(200, 6, 0.05, seed=0)
+
+    def fake_measure(delta, strat, cap, reps):
+        return 1.0e-6 if strat == "sharded_edge" else 1.0e-3
+
+    rec = tune(g, deltas=(5, 10),
+               strategies=("edge", "ell", "sharded_edge"),
+               measure_fn=fake_measure)
+    assert rec.strategy == "sharded_edge"
+    assert rec.n_shards == jax.device_count()
+    assert TuningRecord.from_json(rec.to_json()) == rec
+    cfg = rec.to_config(DeltaConfig())
+    assert cfg.n_shards == rec.n_shards
+    res = DeltaSteppingSolver(g, cfg).solve(0)
+    dref, _ = dijkstra(g, 0)
+    np.testing.assert_array_equal(np.asarray(res.dist, np.int64), dref)
+
+
 def test_fingerprint_distinguishes_structure():
     a = graph_stats(watts_strogatz(300, 6, 0.05, seed=0))
     b = graph_stats(watts_strogatz(300, 8, 0.05, seed=0))

@@ -1,0 +1,116 @@
+"""Unreachable-vertex contract, pinned across the whole API surface:
+every backend (single-device, pallas, mesh-sharded), every pred mode,
+the batched ``solve_many`` path and the serving path must return the
+same sentinels for disconnected vertices — ``INF32`` distance and
+``-1`` predecessor — bitwise, not approximately (the serving layer
+widens distances to int64 but keeps the INT32_MAX sentinel value).
+"""
+import numpy as np
+import pytest
+
+from _property_driver import null_ctx as _null
+from repro.compat import enable_x64
+from repro.core import DeltaConfig, DeltaSteppingSolver, dijkstra
+from repro.graphs import grid_map, random_graph
+from repro.graphs.structures import COOGraph, INF32
+
+
+def _island_graph():
+    """Edges confined to vertices 0..9; 10..19 are a disconnected tail
+    (some with *outgoing* edges into the core — reachable-from but not
+    reachable, the asymmetric case a naive check misses)."""
+    g = random_graph(10, 40, seed=7)
+    src = np.concatenate([np.asarray(g.src), np.array([12, 15], np.int32)])
+    dst = np.concatenate([np.asarray(g.dst), np.array([0, 3], np.int32)])
+    w = np.concatenate([np.asarray(g.w), np.array([1, 1], np.int32)])
+    return COOGraph(src=src.astype(np.int32), dst=dst.astype(np.int32),
+                    w=w.astype(np.int32), n_nodes=20)
+
+
+GRAPH = _island_graph()
+DREF, _ = dijkstra(GRAPH, 0)
+UNREACHABLE = DREF >= int(INF32)
+
+
+@pytest.mark.parametrize("strategy", ["edge", "ell", "pallas",
+                                      "sharded_edge", "sharded_ell"])
+@pytest.mark.parametrize("pred_mode", ["none", "argmin", "packed"])
+def test_unreachable_sentinels_every_backend(strategy, pred_mode):
+    assert UNREACHABLE.sum() >= 8           # the tail really is cut off
+    ctx = enable_x64() if pred_mode == "packed" else _null()
+    with ctx:
+        cfg = DeltaConfig(delta=5, strategy=strategy, pred_mode=pred_mode,
+                          interpret=True)
+        res = DeltaSteppingSolver(GRAPH, cfg).solve(0)
+        dist = np.asarray(res.dist, np.int64)
+        pred = np.asarray(res.pred)
+    np.testing.assert_array_equal(dist, DREF)
+    assert (dist[UNREACHABLE] == int(INF32)).all()
+    assert (pred[UNREACHABLE] == -1).all()
+
+
+@pytest.mark.parametrize("strategy", ["edge", "sharded_edge"])
+@pytest.mark.parametrize("pred_mode", ["none", "argmin", "packed"])
+def test_unreachable_sentinels_through_solve_many(strategy, pred_mode):
+    """Batched lanes keep the sentinels — including a lane whose source
+    is itself inside the disconnected tail (so the *core* is
+    unreachable from it)."""
+    srcs = np.asarray([0, 12, 19], np.int32)
+    ctx = enable_x64() if pred_mode == "packed" else _null()
+    with ctx:
+        cfg = DeltaConfig(delta=5, strategy=strategy, pred_mode=pred_mode)
+        res = DeltaSteppingSolver(GRAPH, cfg).solve_many(srcs)
+        dist = np.asarray(res.dist, np.int64)
+        pred = np.asarray(res.pred)
+    for i, s in enumerate(srcs):
+        ref, _ = dijkstra(GRAPH, int(s))
+        unreachable = ref >= int(INF32)
+        np.testing.assert_array_equal(dist[i], ref, err_msg=f"lane {i}")
+        assert (dist[i][unreachable] == int(INF32)).all(), f"lane {i}"
+        assert (pred[i][unreachable] == -1).all(), f"lane {i}"
+        assert pred[i][s] == -1, f"lane {i}"
+    # vertex 19 is fully isolated: everything but itself is unreachable
+    assert (dist[2][np.arange(20) != 19] == int(INF32)).all()
+
+
+@pytest.mark.parametrize("strategy", ["edge", "sharded_edge"])
+def test_unreachable_sentinels_through_serve_path(strategy):
+    """SSSPServer queries: a full-vector query reports INF32 for the
+    tail; a point-to-point query to an unreachable target reports INF32
+    distance and ``path=None`` (not a bogus partial path)."""
+    from repro.serve import SSSPQuery, SSSPServer
+    target = int(np.flatnonzero(UNREACHABLE)[0])
+    srv = SSSPServer(GRAPH,
+                     DeltaConfig(delta=5, strategy=strategy,
+                                 pred_mode="argmin"),
+                     batch_size=2)
+    srv.submit(SSSPQuery(qid=0, source=0))
+    srv.submit(SSSPQuery(qid=1, source=0, target=target))
+    done = sorted(srv.run_to_completion(), key=lambda q: q.qid)
+    assert len(done) == 2
+    full, p2p = done
+    assert (full.dist[UNREACHABLE] == int(INF32)).all()
+    np.testing.assert_array_equal(full.dist, DREF)
+    assert p2p.dist == int(INF32)
+    assert p2p.path is None
+
+
+def test_unreachable_walls_on_gamemap():
+    """Game-map walls (cells with no incident edges) get the same
+    sentinels through the grid-stencil pallas backend as through the
+    generic backends."""
+    g, free = grid_map(12, 15, 0.3, seed=3)
+    flat = np.asarray(free).ravel()
+    src = int(np.flatnonzero(flat)[0])
+    dref, _ = dijkstra(g, src)
+    walls = ~flat
+    for strategy, mask in (("edge", None), ("sharded_ell", None),
+                           ("pallas", free)):
+        cfg = DeltaConfig(delta=13, strategy=strategy, pred_mode="argmin",
+                          interpret=True)
+        res = DeltaSteppingSolver(g, cfg, free_mask=mask).solve(src)
+        dist = np.asarray(res.dist, np.int64)
+        pred = np.asarray(res.pred)
+        np.testing.assert_array_equal(dist, dref, err_msg=strategy)
+        assert (dist[walls] == int(INF32)).all(), strategy
+        assert (pred[walls] == -1).all(), strategy
