@@ -1,0 +1,84 @@
+"""Query-kind benchmarks over the Query/Plan façade (DESIGN.md §10).
+
+Three comparisons the new query algebra is supposed to win:
+
+* point-to-point early exit vs the full single-source solve on a long-
+  diameter lattice (near and far targets; the derived column records
+  the bucket counts, the measurable early-exit evidence);
+* bounded-radius vs the full solve (nearest-POI regime);
+* many-to-many tile throughput (distance-matrix assembly from tiled
+  multi-source programs) in source-target pairs per second.
+
+Plus one tuner-resolved plan row (``gate: false`` per the PR 2
+convention — the tuner's stochastic winner must not flap CI).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, scaled, time_fn
+from repro.api import (
+    BoundedRadius,
+    Engine,
+    ManyToMany,
+    PointToPoint,
+    SingleSource,
+)
+from repro.core import DeltaConfig
+from repro.graphs import square_lattice, watts_strogatz
+
+
+def main():
+    # long-diameter family: the regime where early exit pays
+    side = int(np.sqrt(scaled(40_000)))
+    lat = square_lattice(side, weighted=True)
+    plan = Engine(lat, DeltaConfig(delta=10, pred_mode="none")).plan()
+    full = plan.solve(SingleSource(0))
+    b_full = int(full.telemetry.buckets)
+    t_full = time_fn(lambda: plan.solve(SingleSource(0)).dist)
+    row("queries/lattice/full_solve", t_full, f"buckets={b_full}")
+
+    # near / far p2p targets: quarter-diagonal vs opposite corner
+    near = (side // 4) * side + side // 4
+    far = side * side - 1
+    for name, tgt in (("near", near), ("far", far)):
+        res = plan.solve(PointToPoint(0, tgt))
+        t = time_fn(
+            lambda: plan.solve(PointToPoint(0, tgt)).telemetry.buckets)
+        row(f"queries/lattice/p2p_{name}", t,
+            f"speedup={t_full / t:.2f};buckets={int(res.telemetry.buckets)}"
+            f"/{b_full};dist={res.distance}")
+
+    # bounded radius: an 1/8-diameter ball around the source
+    dist = np.asarray(full.dist, np.int64)
+    radius = int(np.max(dist[dist < 2**31 - 1]) // 8)
+    res = plan.solve(BoundedRadius(0, radius))
+    t = time_fn(lambda: plan.solve(BoundedRadius(0, radius)).dist)
+    row("queries/lattice/bounded_radius", t,
+        f"speedup={t_full / t:.2f};r={radius};"
+        f"buckets={int(res.telemetry.buckets)}/{b_full}")
+
+    # many-to-many tile throughput on the small-world family
+    g = watts_strogatz(scaled(10_000), 12, 1e-2, seed=0)
+    sw_plan = Engine(g, DeltaConfig(delta=10, pred_mode="none")).plan()
+    srcs = list(range(16))
+    tgts = list(range(0, g.n_nodes, max(1, g.n_nodes // 16)))[:16]
+    q = ManyToMany(srcs, tgts, tile=8)
+    sw_plan.solve(q)                         # warm up / compile
+    t_mm = time_fn(lambda: sw_plan.solve(q).matrix, reps=2, warmup=0)
+    pairs = len(srcs) * len(tgts)
+    row("queries/smallworld/many_to_many", t_mm / pairs,
+        f"pairs={pairs};tile=8;pairs_per_s={pairs / t_mm:.0f}")
+
+    # tuner-resolved plan (measured search; informational only)
+    rec_plan = Engine(g, DeltaConfig(pred_mode="none"), tune=True).plan(
+        sources=(0,))
+    rec = rec_plan.record
+    t_tuned = time_fn(lambda: rec_plan.solve(SingleSource(0)).dist)
+    row("queries/smallworld/tuned_plan", t_tuned,
+        f"tuned_delta={rec.delta};tuned_strategy={rec.strategy};"
+        f"record={rec.source}", gate=False)
+
+
+if __name__ == "__main__":
+    main()

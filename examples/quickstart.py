@@ -1,69 +1,108 @@
-"""Quickstart: solve SSSP with Δ-stepping on a small-world graph, verify
-against Dijkstra, reconstruct a shortest path from the predecessor tree.
+"""Quickstart: the Query/Plan façade (repro.api, DESIGN.md §10) on a
+small-world graph — plan once, then dispatch every query kind against
+the same pre-lowered engine; verify against Dijkstra.
 
     PYTHONPATH=src python examples/quickstart.py
+
+The pre-façade entry points (``repro.core.DeltaSteppingSolver``,
+``delta_stepping``, ``serve.SSSPServer``) survive as deprecated thin
+shims over this API with bitwise-identical results — migrate to
+``Engine(...).plan()`` + query objects.
 """
 import numpy as np
 
-from repro.core import DeltaConfig, DeltaSteppingSolver, dijkstra
+from repro.api import (
+    BoundedRadius,
+    Engine,
+    ManyToMany,
+    MultiSource,
+    PointToPoint,
+    SingleSource,
+)
+from repro.core import DeltaConfig, dijkstra
 from repro.graphs import watts_strogatz
 
 # the paper's small-world family: ring lattice + random rewiring
 g = watts_strogatz(n=5_000, k=20, p=1e-2, seed=0)
 print(f"graph: |V|={g.n_nodes} |E|={g.n_edges}")
 
-solver = DeltaSteppingSolver(g, DeltaConfig(delta=10, pred_mode="argmin"))
-res = solver.solve(source=0)
-print(f"Δ-stepping: {int(res.outer_iters)} buckets, "
-      f"{int(res.inner_iters)} light sweeps")
+# plan once: config resolution, backend build, jitted drivers — then
+# every query kind dispatches against the same compiled engine
+plan = Engine(g, DeltaConfig(delta=10, pred_mode="argmin")).plan()
+res = plan.solve(SingleSource(0))
+print(f"Δ-stepping: {int(res.telemetry.buckets)} buckets, "
+      f"{int(res.telemetry.inner_iters)} light sweeps")
 
 # verify against the Dijkstra oracle (the paper's Boost baseline)
 ref, _ = dijkstra(g, 0)
 assert np.array_equal(np.asarray(res.dist, np.int64), ref)
 print("distances match heap Dijkstra ✓")
 
-# reconstruct the path to the farthest reachable vertex
+# point-to-point with early exit (Kainer–Träff): the solve stops as
+# soon as the target's bucket settles — strictly fewer buckets than the
+# full solve whenever the target is not among the farthest vertices
 dist = np.asarray(res.dist)
-pred = np.asarray(res.pred)
 far = int(np.argmax(np.where(dist < 2**31 - 1, dist, -1)))
-path = [far]
-while pred[path[-1]] >= 0:
-    path.append(int(pred[path[-1]]))
-print(f"farthest vertex {far} at distance {dist[far]}, "
-      f"path length {len(path)} hops")
+p2p = plan.solve(PointToPoint(0, far))
+assert p2p.distance == int(ref[far])
+print(f"p2p 0->{far}: dist={p2p.distance}, "
+      f"path {len(p2p.path) - 1} hops, "
+      f"{int(p2p.telemetry.buckets)} buckets (early exit)")
 
-# batched multi-source solve: one program for a whole batch of sources
-many = solver.solve_many([0, 1, 2, 3])
+# bounded radius (nearest-POI workloads): everything farther than r
+# reports as unreachable, and the solve stops at bucket r // Δ
+r = int(np.median(ref[ref < 2**31 - 1]))
+ball = plan.solve(BoundedRadius(0, r))
+n_in = int((np.asarray(ball.dist) < 2**31 - 1).sum())
+print(f"bounded radius {r}: {n_in} vertices within, "
+      f"{int(ball.telemetry.buckets)} buckets")
+
+# batched multi-source: one vmapped program for the whole batch; lane i
+# is bitwise identical to SingleSource(sources[i])
+many = plan.solve(MultiSource([0, 1, 2, 3]))
 assert np.array_equal(np.asarray(many.dist[0]), dist)
 print(f"solve_many: batch of {many.dist.shape[0]} sources, "
-      f"{[int(o) for o in many.outer_iters]} buckets each")
+      f"{[int(o) for o in many.telemetry.buckets]} buckets each")
+
+# many-to-many distance matrix, assembled from tiled multi-source runs
+mm = plan.solve(ManyToMany(sources=[0, 1, 2], targets=[10, 20, 30],
+                           tile=2))
+assert np.array_equal(mm.matrix[0], ref[[10, 20, 30]])
+print(f"many-to-many: {mm.matrix.shape} matrix via tiled solves ✓")
 
 # auto-tuning: config="auto" picks Δ from graph statistics (the paper's
-# hand-swept Fig. 1 knob, estimated as Δ ≈ c·w̄/d̄ with zero measurement).
-# Answers never change — only time does.
-auto = DeltaSteppingSolver(g, "auto")
-res_auto = auto.solve(source=0)
+# hand-swept Fig. 1 knob, estimated as Δ ≈ c·w̄/d̄ with zero
+# measurement). The TuningRecord attaches to the plan. Answers never
+# change — only time does.
+auto_plan = Engine(g, "auto").plan()
+res_auto = auto_plan.solve(SingleSource(0))
 assert np.array_equal(np.asarray(res_auto.dist), dist)
-print(f"config='auto': Δ={auto.config.delta} "
-      f"({auto.config.strategy}), same distances ✓")
+print(f"config='auto': Δ={auto_plan.config.delta} "
+      f"({auto_plan.config.strategy}), same distances ✓")
 # tune_cache="tuning.json" reuses records a measured search persisted —
 # run `python -m repro.launch.sssp --tune --tune-cache tuning.json`
 # (repro.tune.tune) once to populate it; "auto" alone never measures.
 
 # mesh-sharded backend (DESIGN.md §9): relaxation partitioned over every
 # local device under shard_map, tentative distances merged with an
-# all-reduce min each sweep. Min on tent words is associative, so the
-# distances (and, in pred_mode="packed", the predecessors) are bitwise
-# identical to the single-device engine for any shard count. Run under
+# all-reduce min each sweep — bitwise identical to single-device for
+# any shard count. Run under
 #   XLA_FLAGS=--xla_force_host_platform_device_count=8
 # to fake an 8-device host mesh on CPU, or use the CLI:
 #   python -m repro.launch.sssp --strategy sharded_edge --verify
 import jax
 
-sharded = DeltaSteppingSolver(
-    g, DeltaConfig(delta=10, strategy="sharded_edge", pred_mode="argmin"))
-res_sh = sharded.solve(source=0)
+sh_plan = Engine(g, DeltaConfig(delta=10, strategy="sharded_edge",
+                                pred_mode="argmin")).plan()
+res_sh = sh_plan.solve(SingleSource(0))
 assert np.array_equal(np.asarray(res_sh.dist), dist)
-assert np.array_equal(np.asarray(res_sh.pred), pred)
+assert np.array_equal(np.asarray(res_sh.pred), np.asarray(res.pred))
 print(f"sharded_edge over {jax.device_count()} device(s): "
       f"same distances ✓")
+
+# deprecated alias, kept bitwise-identical (migration safety net):
+from repro.core import DeltaSteppingSolver
+
+legacy = DeltaSteppingSolver(g, DeltaConfig(delta=10, pred_mode="argmin"))
+assert np.array_equal(np.asarray(legacy.solve(0).dist), dist)
+print("deprecated DeltaSteppingSolver shim: same distances ✓")

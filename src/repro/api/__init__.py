@@ -1,0 +1,54 @@
+"""Query/Plan façade — the public entry point of the Δ-stepping engine
+(DESIGN.md §10).
+
+    from repro.api import Engine, SingleSource, PointToPoint
+
+    plan = Engine(graph, config="auto").plan()
+    full = plan.solve(SingleSource(0))           # dist/pred + telemetry
+    hop = plan.solve(PointToPoint(0, 42))        # early-exit distance+path
+
+``Engine`` resolves tuning / strategy / caps exactly once per plan;
+``Plan.solve`` dispatches the query algebra (``SingleSource``,
+``MultiSource``, ``PointToPoint``, ``BoundedRadius``, ``ManyToMany``)
+onto pre-lowered jitted drivers shared with every other plan of the
+same shape. The pre-façade entry points — ``core.DeltaSteppingSolver``,
+``core.delta_stepping``, ``serve.SSSPServer`` — survive as deprecated
+thin shims over this package with bitwise-identical results.
+"""
+
+from repro.api.engine import Engine, Plan
+from repro.api.paths import extract_path
+from repro.api.queries import (
+    BoundedRadius,
+    BoundedRadiusResult,
+    ManyToMany,
+    ManyToManyResult,
+    MultiSource,
+    MultiSourceResult,
+    PointToPoint,
+    PointToPointResult,
+    Query,
+    Result,
+    SingleSource,
+    SingleSourceResult,
+    Telemetry,
+)
+
+__all__ = [
+    "BoundedRadius",
+    "BoundedRadiusResult",
+    "Engine",
+    "ManyToMany",
+    "ManyToManyResult",
+    "MultiSource",
+    "MultiSourceResult",
+    "Plan",
+    "PointToPoint",
+    "PointToPointResult",
+    "Query",
+    "Result",
+    "SingleSource",
+    "SingleSourceResult",
+    "Telemetry",
+    "extract_path",
+]

@@ -1,0 +1,326 @@
+"""The Query/Plan façade — the one public entry point of the engine.
+
+``Engine(graph, config="auto").plan()`` resolves tuning / strategy /
+caps exactly once and returns a ``Plan`` holding the pre-lowered jitted
+drivers (the module-level jitted programs of ``core.delta_stepping``,
+so plans over same-shaped graphs share compile cache entries exactly
+like the deprecated ``DeltaSteppingSolver`` did); ``plan.solve(query)``
+dispatches on the small query algebra of ``queries.py``.
+
+Resolution (DESIGN.md §7/§10) happens in one place, ``Engine.plan``:
+
+* a concrete ``DeltaConfig`` with no tuning inputs is used as-is;
+* ``config="auto"`` — or a concrete config plus ``tune=True`` /
+  ``tune_cache=...`` acting as the tuning *base* — goes through
+  ``tune.resolve_record``, whose cap validation runs on the one shared
+  ``build_safe_solver`` path: a tuning-chosen ``frontier_cap`` is
+  re-validated against ``plan(sources=...)`` (and dropped on overflow)
+  or dropped outright when the plan cannot know its future sources.
+  The winning ``TuningRecord`` attaches to the plan (``plan.record``) —
+  a Plan is the unit tuning evidence hangs off.
+
+Overflow handling has one fallback point, ``Plan.solve``: with
+``fallback=True`` (the serving configuration) a query whose solve trips
+the compacted-frontier ``overflow`` flag is re-answered by a full-width
+twin plan and the plan demotes to it permanently — capped solves may
+move time, never answers. With ``fallback=False`` (the parity default)
+the flag is reported in the result telemetry and the caller decides,
+exactly like the pre-façade solver.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.paths import extract_path
+from repro.api.queries import (
+    BoundedRadius,
+    BoundedRadiusResult,
+    ManyToMany,
+    ManyToManyResult,
+    MultiSource,
+    MultiSourceResult,
+    PointToPoint,
+    PointToPointResult,
+    Query,
+    Result,
+    SingleSource,
+    SingleSourceResult,
+    Telemetry,
+)
+from repro.core.backends import dist_of, make_backend
+from repro.core.delta_stepping import (
+    DeltaConfig,
+    _finish_pred,
+    _finish_pred_many,
+    _require_x64,
+    _run_many_seq,
+    _run_many_vmapped,
+    _run_one,
+    _run_one_bounded,
+    _run_one_p2p,
+)
+from repro.graphs.structures import COOGraph, INF32
+
+
+def _mark_fallback(res: Result) -> Result:
+    tel = dataclasses.replace(res.telemetry, fallback=True)
+    return dataclasses.replace(res, telemetry=tel)
+
+
+def _check_vertex(name: str, v, n: int) -> int:
+    """Host-side id validation: out-of-range ids would otherwise be
+    silently dropped by the jitted scatter (an all-INF 'answer') or
+    clamped by the gather (a wrong early exit)."""
+    v = int(v)
+    if not 0 <= v < n:
+        raise ValueError(f"{name} {v} out of range for a {n}-vertex graph")
+    return v
+
+
+def _check_vertices(name: str, arr: np.ndarray, n: int) -> None:
+    if arr.size and (int(arr.min()) < 0 or int(arr.max()) >= n):
+        raise ValueError(f"{name} contain ids out of range, graph has {n}")
+
+
+class Plan:
+    """A compiled operating point for one graph: resolved config,
+    relaxation backend, and partially-applied module-level jitted
+    drivers for every query kind. Built by ``Engine.plan``; solvable
+    immediately and repeatedly via ``solve(query)``."""
+
+    def __init__(
+        self,
+        graph: COOGraph,
+        config: DeltaConfig,
+        *,
+        free_mask=None,
+        record=None,
+        fallback: bool = False,
+    ):
+        if config.pred_mode == "packed":
+            _require_x64()
+        self.graph = graph
+        self.config = config
+        self.record = record
+        self.free_mask = free_mask
+        self.backend = make_backend(graph, config, free_mask=free_mask)
+        packed = config.pred_mode == "packed"
+        self._packed = packed
+        n = graph.n_nodes
+        self._run1 = partial(_run_one, n=n, packed=packed)
+        many = _run_many_vmapped if self.backend.supports_vmap else _run_many_seq
+        self._run_many = partial(many, n=n, packed=packed)
+        self._run_p2p = partial(_run_one_p2p, n=n, packed=packed)
+        self._run_bounded = partial(_run_one_bounded, n=n, packed=packed)
+        # the one overflow-fallback point: only meaningful when a capped
+        # compaction can actually overflow
+        self._fallback = bool(fallback) and config.frontier_cap is not None
+        self._demoted: Optional[Plan] = None
+
+    # -- the one public operation -------------------------------------------
+
+    def solve(self, query: Query) -> Result:
+        """Answer one query. With fallback enabled, a solve that trips
+        the compacted-frontier overflow flag is re-answered by the
+        full-width twin plan (and the plan demotes to it permanently —
+        a query mix that overflowed once would otherwise pay capped +
+        uncapped solves on every call)."""
+        if self._demoted is not None:
+            return _mark_fallback(self._demoted._dispatch(query))
+        res = self._dispatch(query)
+        if self._fallback and bool(np.any(np.asarray(res.telemetry.overflow))):
+            self._demoted = Plan(
+                self.graph,
+                dataclasses.replace(self.config, frontier_cap=None),
+                free_mask=self.free_mask,
+                record=self.record,
+            )
+            res = _mark_fallback(self._demoted._dispatch(query))
+        return res
+
+    def explain(self) -> dict:
+        """Plan provenance for logs/telemetry: the resolved operating
+        point plus the tuning record (if any) it came from."""
+        cfg = self.config
+        return {
+            "delta": cfg.delta,
+            "strategy": cfg.strategy,
+            "pred_mode": cfg.pred_mode,
+            "frontier_cap": cfg.frontier_cap,
+            "n_shards": cfg.n_shards,
+            "tuning_source": None if self.record is None else self.record.source,
+            "fallback_taken": self._demoted is not None,
+        }
+
+    # -- query dispatch ------------------------------------------------------
+
+    def _dispatch(self, query: Query) -> Result:
+        if isinstance(query, SingleSource):
+            return self._single(query)
+        if isinstance(query, MultiSource):
+            return self._multi(query)
+        if isinstance(query, PointToPoint):
+            return self._point_to_point(query)
+        if isinstance(query, BoundedRadius):
+            return self._bounded(query)
+        if isinstance(query, ManyToMany):
+            return self._many_to_many(query)
+        raise TypeError(f"unknown query kind {type(query).__name__!r}")
+
+    def _single(self, q: SingleSource) -> SingleSourceResult:
+        src = jnp.asarray(
+            _check_vertex("source", q.source, self.graph.n_nodes), jnp.int32
+        )
+        tent, outer, inner, over = self._run1(self.backend, src)
+        dist, pred = _finish_pred(tent, self.graph, src, self.config)
+        return SingleSourceResult(dist, pred, Telemetry(outer, inner, over))
+
+    def _multi(self, q: MultiSource) -> MultiSourceResult:
+        host = np.asarray(q.sources, np.int64)
+        if host.ndim != 1:
+            raise ValueError("sources must be a 1-D array of vertex ids")
+        _check_vertices("sources", host, self.graph.n_nodes)
+        srcs = jnp.asarray(host, jnp.int32)
+        tent, outer, inner, over = self._run_many(self.backend, srcs)
+        dist, pred = _finish_pred_many(tent, self.graph, srcs, self.config)
+        return MultiSourceResult(dist, pred, Telemetry(outer, inner, over))
+
+    def _point_to_point(self, q: PointToPoint) -> PointToPointResult:
+        n = self.graph.n_nodes
+        src = jnp.asarray(_check_vertex("source", q.source, n), jnp.int32)
+        tgt = jnp.asarray(_check_vertex("target", q.target, n), jnp.int32)
+        tent, outer, inner, over = self._run_p2p(self.backend, src, tgt)
+        # every vertex on a shortest source->target path is settled at
+        # early exit (its bucket precedes the target's), so the partial
+        # predecessor state is exact along the returned path
+        dist, pred = _finish_pred(tent, self.graph, src, self.config)
+        distance = int(np.asarray(dist)[int(q.target)])
+        path = None
+        if distance < int(INF32) and self.config.pred_mode != "none":
+            path = extract_path(
+                np.asarray(pred), int(q.source), int(q.target), self.graph.n_nodes
+            )
+        return PointToPointResult(distance, path, Telemetry(outer, inner, over))
+
+    def _bounded(self, q: BoundedRadius) -> BoundedRadiusResult:
+        radius = int(q.radius)
+        if not 0 <= radius < int(INF32):
+            raise ValueError(f"radius must be in [0, INF32), got {radius}")
+        src = jnp.asarray(
+            _check_vertex("source", q.source, self.graph.n_nodes), jnp.int32
+        )
+        r_arr = jnp.asarray(radius, jnp.int32)
+        tent, outer, inner, over = self._run_bounded(self.backend, src, r_arr)
+        dist, pred = _finish_pred(tent, self.graph, src, self.config)
+        # all buckets <= radius // delta were processed, so every vertex
+        # with true distance <= radius is settled; the rest are filtered
+        # to the unreachable sentinels (their tent values are bounds,
+        # not answers)
+        within = dist <= radius
+        dist = jnp.where(within, dist, jnp.int32(INF32))
+        pred = jnp.where(within, pred, jnp.int32(-1))
+        return BoundedRadiusResult(dist, pred, radius, Telemetry(outer, inner, over))
+
+    def _many_to_many(self, q: ManyToMany) -> ManyToManyResult:
+        n = self.graph.n_nodes
+        sources = [_check_vertex("source", s, n) for s in q.sources]
+        targets = np.asarray([int(t) for t in q.targets], np.int64)
+        if not sources or targets.size == 0:
+            raise ValueError("ManyToMany needs non-empty sources and targets")
+        _check_vertices("targets", targets, n)
+        tile = int(q.tile) if q.tile is not None else min(len(sources), 8)
+        if tile < 1:
+            raise ValueError(f"tile must be >= 1, got {tile}")
+        matrix = np.full((len(sources), len(targets)), int(INF32), np.int64)
+        buckets, inner_total, over_any = 0, 0, False
+        for lo in range(0, len(sources), tile):
+            chunk = sources[lo : lo + tile]
+            # short tiles repeat the last source so every tile runs the
+            # same compiled shape (the padded lanes are discarded)
+            padded = chunk + [chunk[-1]] * (tile - len(chunk))
+            srcs = jnp.asarray(padded, jnp.int32)
+            tent, outer, inner, over = self._run_many(self.backend, srcs)
+            d = np.asarray(dist_of(tent, self._packed))
+            matrix[lo : lo + len(chunk)] = d[: len(chunk)][:, targets]
+            buckets = max(buckets, int(np.max(np.asarray(outer))))
+            inner_total += int(np.sum(np.asarray(inner)))
+            over_any = over_any or bool(np.any(np.asarray(over)))
+        tel = Telemetry(np.int32(buckets), np.int32(inner_total), np.bool_(over_any))
+        return ManyToManyResult(matrix, tel)
+
+
+class Engine:
+    """Façade entry point: holds the graph plus the tuning inputs, and
+    mints ``Plan``s. ``config`` is a concrete ``DeltaConfig`` or
+    ``"auto"``; with ``tune=True`` (measured search) or ``tune_cache``
+    (persistent record store) a concrete config survives as the tuning
+    *base* — its non-searched fields carry into the resolved plan."""
+
+    def __init__(
+        self,
+        graph: COOGraph,
+        config: Union[DeltaConfig, str] = "auto",
+        *,
+        free_mask=None,
+        tune: bool = False,
+        tune_cache: Optional[str] = None,
+    ):
+        if isinstance(config, str) and config != "auto":
+            raise ValueError(
+                f"unknown config string {config!r} (did you mean 'auto' "
+                "or a DeltaConfig?)"
+            )
+        self.graph = graph
+        self.free_mask = free_mask
+        self._config = config
+        self._tune = tune
+        self._tune_cache = tune_cache
+
+    def plan(
+        self,
+        *,
+        sources: Optional[Sequence[int]] = None,
+        fallback: bool = False,
+    ) -> Plan:
+        """Resolve the operating point once and return the compiled
+        ``Plan``. ``sources`` are the vertices the caller will actually
+        solve from: a tuning-chosen ``frontier_cap`` is validated
+        against exactly those (one shared ``build_safe_solver`` path)
+        and dropped on overflow; ``sources=None`` — a plan that cannot
+        know its future queries — drops a tuned cap outright and can
+        instead serve with ``fallback=True`` (per-query overflow
+        re-solve, the ``SSSPServer`` configuration)."""
+        cfg, record = self._resolve(sources)
+        return Plan(
+            self.graph,
+            cfg,
+            free_mask=self.free_mask,
+            record=record,
+            fallback=fallback,
+        )
+
+    def _resolve(self, sources):
+        cfg = self._config
+        auto = isinstance(cfg, str)
+        if not (auto or self._tune or self._tune_cache is not None):
+            return cfg, None  # concrete config, no tuning inputs: as-is
+        from repro.tune import resolve_record  # lazy: tune builds on core/api
+
+        base = DeltaConfig() if auto else cfg
+        return resolve_record(
+            self.graph,
+            base,
+            free_mask=self.free_mask,
+            cache_path=self._tune_cache,
+            measure=self._tune,
+            sources=sources,
+        )
+
+
+__all__ = ["Engine", "Plan"]

@@ -1,0 +1,36 @@
+"""Host-side path recovery from predecessor arrays.
+
+One implementation shared by the façade's ``PointToPoint`` dispatch and
+the serving layer (``serve.SSSPServer``), so path semantics cannot
+diverge between the two: walk the predecessor chain target -> source,
+bounded by ``n_nodes`` hops — a chain that does not reach the source
+within n hops is either an unreachable target or an off-tree cycle
+(``pred_mode='argmin'`` on a zero-weight tie, see pack.py) and yields
+``None`` instead of looping forever.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+def extract_path(
+    pred: np.ndarray, source: int, target: int, n_nodes: int
+) -> Optional[List[int]]:
+    """Source->target vertex list from a predecessor array, or ``None``
+    when the chain does not reach the source."""
+    source, target = int(source), int(target)
+    path = [target]
+    for _ in range(n_nodes):
+        if path[-1] == source:
+            return path[::-1]
+        p = int(pred[path[-1]])
+        if p < 0:
+            return None
+        path.append(p)
+    return path[::-1] if path[-1] == source else None
+
+
+__all__ = ["extract_path"]

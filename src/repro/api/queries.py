@@ -1,0 +1,169 @@
+"""The query algebra and typed results of the Query/Plan façade.
+
+A query names *what* to compute against a planned graph; the ``Plan``
+(engine.py) decides *how* — which pre-lowered jitted driver runs and
+which early-exit rule applies (DESIGN.md §10):
+
+* ``SingleSource``  — the paper's kernel: full distance vector (+ tree).
+* ``MultiSource``   — batched sources, one vmapped program; lane ``i``
+  is bitwise identical to ``SingleSource(sources[i])``.
+* ``PointToPoint``  — one (source, target) pair with early exit once
+  the target's bucket settles (Kainer & Träff 2019): a settled bucket
+  bounds all later tent values, so the target's distance is final as
+  soon as its bucket index drops below the next bucket to process.
+* ``BoundedRadius`` — all vertices within distance ``radius`` of the
+  source (nearest-POI workloads); the outer loop stops at the first
+  bucket past ``radius // delta`` and everything farther reports as
+  unreachable.
+* ``ManyToMany``    — an |S| x |T| distance matrix assembled from tiled
+  multi-source solves (betweenness/matrix workloads); every tile runs
+  the same compiled multi-source program.
+
+Every result carries a ``Telemetry`` record of what the solve actually
+did — buckets processed, light-phase inner iterations, the compacted-
+frontier overflow flag, and whether the plan's overflow fallback
+re-solved the query full-width.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Sequence, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class SingleSource:
+    """Full SSSP from one source: distance vector + predecessor tree."""
+
+    source: int
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiSource:
+    """Batched SSSP from several sources (one vmapped program; each
+    lane is bitwise identical to the corresponding ``SingleSource``)."""
+
+    sources: Sequence[int]
+
+
+@dataclasses.dataclass(frozen=True)
+class PointToPoint:
+    """One source -> target distance (and path, when the plan tracks
+    predecessors), with early exit once the target's bucket settles."""
+
+    source: int
+    target: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundedRadius:
+    """Distances of every vertex within ``radius`` of the source;
+    vertices farther than ``radius`` report as unreachable."""
+
+    source: int
+    radius: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ManyToMany:
+    """|S| x |T| distance matrix, assembled from multi-source solves
+    tiled ``tile`` sources at a time (default: min(|S|, 8))."""
+
+    sources: Sequence[int]
+    targets: Sequence[int]
+    tile: Optional[int] = None
+
+
+Query = Union[SingleSource, MultiSource, PointToPoint, BoundedRadius, ManyToMany]
+
+
+@dataclasses.dataclass(frozen=True)
+class Telemetry:
+    """What one solve actually did. ``buckets`` / ``inner_iters`` /
+    ``overflow`` are the driver's raw counters (jax scalars, or arrays
+    with a leading batch axis for ``MultiSource``); ``fallback`` is True
+    when the plan's overflow fallback answered the query full-width."""
+
+    buckets: Any
+    inner_iters: Any
+    overflow: Any
+    fallback: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SingleSourceResult:
+    """``dist`` int32[n] (INF32 = unreachable), ``pred`` int32[n]
+    (-1 = source/unreachable) — bitwise identical to the deprecated
+    ``DeltaSteppingSolver.solve`` fields."""
+
+    dist: Any
+    pred: Any
+    telemetry: Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiSourceResult:
+    """Per-lane ``dist`` int32[B, n] / ``pred`` int32[B, n] — bitwise
+    identical to the deprecated ``DeltaSteppingSolver.solve_many``."""
+
+    dist: Any
+    pred: Any
+    telemetry: Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class PointToPointResult:
+    """``distance`` is a host int (INF32 sentinel when unreachable);
+    ``path`` is the source->target vertex list, or None when the target
+    is unreachable or the plan tracks no predecessors."""
+
+    distance: int
+    path: Optional[List[int]]
+    telemetry: Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundedRadiusResult:
+    """``dist``/``pred`` filtered to the radius: vertices with
+    dist > radius carry the INF32 / -1 sentinels (their true distances
+    were never settled — the whole point of the early exit)."""
+
+    dist: Any
+    pred: Any
+    radius: int
+    telemetry: Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class ManyToManyResult:
+    """``matrix`` int64[|S|, |T|] host array with the INF32 sentinel for
+    unreachable pairs; telemetry aggregates across tiles (max buckets,
+    summed inner iterations, any-overflow)."""
+
+    matrix: Any
+    telemetry: Telemetry
+
+
+Result = Union[
+    SingleSourceResult,
+    MultiSourceResult,
+    PointToPointResult,
+    BoundedRadiusResult,
+    ManyToManyResult,
+]
+
+__all__ = [
+    "BoundedRadius",
+    "BoundedRadiusResult",
+    "ManyToMany",
+    "ManyToManyResult",
+    "MultiSource",
+    "MultiSourceResult",
+    "PointToPoint",
+    "PointToPointResult",
+    "Query",
+    "Result",
+    "SingleSource",
+    "SingleSourceResult",
+    "Telemetry",
+]

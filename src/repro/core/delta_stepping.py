@@ -19,12 +19,18 @@ the ``RelaxBackend`` protocol (core.backends): ``edge`` (edge-centric
 (the ELL expansion and bucket scan on the Pallas TPU kernels under
 ``kernels/``; game-map instances use the grid stencil kernel).
 
-Batched multi-source solving (``DeltaSteppingSolver.solve_many``) vmaps
-the driver over a batch of sources: the carried state (tent / explored /
-frontier, bucket index, iteration counters) gains a leading batch axis,
-the while-loops run until every lane converges, and converged lanes are
+Batched multi-source solving (``_run_many_vmapped``) vmaps the driver
+over a batch of sources: the carried state (tent / explored / frontier,
+bucket index, iteration counters) gains a leading batch axis, the
+while-loops run until every lane converges, and converged lanes are
 frozen by the batching rule's select — so per-source counters and
-results are bitwise identical to per-source ``solve``.
+results are bitwise identical to per-source single solves.
+
+The public surface of this module is consumed through the Query/Plan
+façade (``repro.api``, DESIGN.md §10): ``Plan`` partially applies the
+module-level jitted drivers below, and the early-exit query kinds
+(point-to-point, bounded radius) are the ``stop``-predicate variants of
+the same loop. ``DeltaSteppingSolver`` survives as a deprecated shim.
 
 Weights must be non-negative int32; ``pred_mode='argmin'`` additionally
 assumes weights >= 1 (zero-weight ties could close a predecessor cycle;
@@ -45,7 +51,6 @@ from repro.core.backends import (
     RelaxBackend,
     dist_of as _dist_of,
     init_tent as _init_tent,
-    make_backend,
 )
 from repro.graphs.structures import COOGraph, INF32
 
@@ -143,9 +148,48 @@ def _run_many_seq(backend: RelaxBackend, sources, *, n: int, packed: bool):
         lambda s: _run_backend(backend, s, n=n, packed=packed), sources)
 
 
-def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool):
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_one_p2p(backend: RelaxBackend, source, target, *, n: int,
+                 packed: bool):
+    """Jitted point-to-point driver with early exit (Kainer & Träff
+    2019, DESIGN.md §10): when the outer loop advances past bucket i,
+    every vertex whose tentative distance lies in a bucket <= i is
+    settled — and the next-bucket scan is a global min over *all*
+    finite tent values, so ``tent[target] // Δ < next_bucket`` proves
+    the target's bucket was already processed and its distance is
+    final. ``target`` is a traced argument (no recompile per target)."""
+    delta = backend.delta
+
+    def stop(tent, nxt):
+        d_t = _dist_of(tent, packed)[target]
+        return (d_t < INF32) & ((d_t // delta) < nxt)
+
+    return _run_backend(backend, source, n=n, packed=packed, stop=stop)
+
+
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_one_bounded(backend: RelaxBackend, source, radius, *, n: int,
+                     packed: bool):
+    """Jitted bounded-radius driver: stop at the first bucket past
+    ``radius // Δ`` — every vertex with true distance <= radius lives
+    in a bucket <= radius // Δ and is settled by then; tent values
+    beyond are upper bounds, not answers (the caller filters them)."""
+    delta = backend.delta
+
+    def stop(tent, nxt):
+        return nxt > radius // delta
+
+    return _run_backend(backend, source, n=n, packed=packed, stop=stop)
+
+
+def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool,
+                 stop=None):
     """Outer/inner Δ-stepping loop (paper Alg. 1) over one backend.
-    Returns ``(tent, outer_iters, inner_iters, overflow)``."""
+    Returns ``(tent, outer_iters, inner_iters, overflow)``. ``stop``
+    (trace-time constant) is an optional early-exit predicate
+    ``(tent, next_bucket) -> bool`` checked between buckets — the hook
+    the point-to-point and bounded-radius drivers hang off; ``None``
+    keeps the full-solve loop bit-for-bit unchanged."""
     tent0 = _init_tent(n, source, packed)
     explored0 = jnp.full((n,), INF32, jnp.int32)
 
@@ -182,7 +226,10 @@ def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool):
         return (tent, explored, nxt, outer + 1, inner, over | o)
 
     def outer_cond(c):
-        return c[2] < _IMAX
+        go = c[2] < _IMAX
+        if stop is not None:
+            go = go & jnp.logical_not(stop(c[0], c[2]))
+        return go
 
     i0 = jnp.zeros((), jnp.int32)  # relax(s, 0) puts the source in B_0
     tent, _, _, outer, inner, over = lax.while_loop(
@@ -225,91 +272,88 @@ def _finish_pred(tent, coo: COOGraph, source, cfg: DeltaConfig):
     return dist, pred
 
 
-# ---------------------------------------------------------------------------
-# public API
-# ---------------------------------------------------------------------------
+def _finish_pred_many(tent, coo: COOGraph, srcs, cfg: DeltaConfig):
+    """Batched twin of :func:`_finish_pred` (leading batch axis on
+    ``tent``/``srcs``); shared by the façade's MultiSource dispatch and
+    the deprecated ``solve_many`` shim so the two stay bitwise equal."""
+    packed = cfg.pred_mode == "packed"
+    dist = _dist_of(tent, packed)
+    if cfg.pred_mode == "none":
+        pred = jnp.full(dist.shape, -1, jnp.int32)
+    elif packed:
+        pred = packing.unpack_pred(tent)
+        pred = jnp.where(dist < INF32, pred, -1)
+        pred = pred.at[jnp.arange(srcs.shape[0]), srcs].set(-1)
+    else:
+        pred = jax.vmap(lambda d, s: pred_argmin(
+            d, coo.src, coo.dst, coo.w, s, n=coo.n_nodes))(dist, srcs)
+    return dist, pred
 
-def _resolve_auto(graph, config, free_mask=None, tune_cache=None):
-    """Map ``config="auto"`` to a concrete ``DeltaConfig`` via the tuning
-    subsystem (lazy import: core must not depend on repro.tune at module
-    load — tune builds solvers from this module)."""
-    if not isinstance(config, str):
-        return config
-    if config != "auto":
-        raise ValueError(f"unknown config string {config!r} (did you mean "
-                         "'auto' or a DeltaConfig?)")
-    from repro.tune import resolve_config
-    # sources=None: the solver cannot know its future sources, so a
-    # tuning-chosen frontier cap is dropped rather than trusted
-    return resolve_config(graph, free_mask=free_mask, cache_path=tune_cache,
-                          sources=None)
 
+# ---------------------------------------------------------------------------
+# public API — deprecated shims over the Query/Plan façade (repro.api)
+# ---------------------------------------------------------------------------
 
 class DeltaSteppingSolver:
-    """Preprocesses a graph once (paper's parallel preprocessing stage) and
-    solves SSSP from arbitrary sources — singly (``solve``) or as a
-    batched multi-source program (``solve_many``, the regime of the
-    paper's betweenness-centrality citation) — with jitted programs
-    shared across calls.
+    """**Deprecated** thin shim over the Query/Plan façade — prefer
+    ``repro.api.Engine(graph, config).plan()`` (DESIGN.md §10).
+
+    Kept with its original signature under a parity contract: ``solve``
+    and ``solve_many`` delegate to ``Plan.solve(SingleSource(...))`` /
+    ``Plan.solve(MultiSource(...))``, which run the very same module-
+    level jitted drivers and finishers this class used to own, so dist
+    and pred (including packed (cost, pred) words) are bitwise
+    identical to the pre-façade solver on every backend
+    (tests/test_api_queries.py pins this).
 
     ``free_mask`` (bool[H, W]) marks the game-map graph class: together
     with ``strategy='pallas'`` it routes relaxation to the grid-stencil
-    kernel (DESIGN.md §3).
-
-    ``config="auto"`` consults the tuning subsystem (DESIGN.md §7): a
-    cached ``TuningRecord`` for this graph's fingerprint if one exists,
-    the zero-measurement Δ estimator otherwise. ``tune_cache`` names the
-    persistent cache file to consult."""
+    kernel (DESIGN.md §3). ``config="auto"`` consults the tuning
+    subsystem (DESIGN.md §7); ``tune_cache`` names the persistent cache
+    file to consult."""
 
     def __init__(self, graph: COOGraph, config: DeltaConfig = DeltaConfig(),
                  *, free_mask=None, tune_cache: Optional[str] = None):
-        config = _resolve_auto(graph, config, free_mask, tune_cache)
-        self.config = config
+        from repro.api import Engine  # lazy: api builds on this module
+        # legacy semantics, preserved exactly: tune_cache is consulted
+        # for config="auto" only — a concrete config a caller pinned is
+        # never overwritten by a cached record (Engine would treat it as
+        # a tuning base; the old _resolve_auto did not). sources=None:
+        # the solver cannot know its future sources, so a tuning-chosen
+        # frontier cap is dropped rather than trusted.
+        cache = tune_cache if isinstance(config, str) else None
+        self._plan = Engine(graph, config, free_mask=free_mask,
+                            tune_cache=cache).plan(sources=None)
+        self.config = self._plan.config
         self.graph = graph
-        if config.pred_mode == "packed":
-            _require_x64()
-        self.backend = make_backend(graph, config, free_mask=free_mask)
-        packed = config.pred_mode == "packed"
-        # module-level jitted drivers (the backend is a pytree argument):
-        # every solver over a same-shaped graph + same static config hits
-        # the same compile cache entry, across solver instances.
-        self._run1 = partial(_run_one, n=graph.n_nodes, packed=packed)
-        many = (_run_many_vmapped if self.backend.supports_vmap
-                else _run_many_seq)
-        self._run_many = partial(many, n=graph.n_nodes, packed=packed)
+        self.backend = self._plan.backend
+
+    @property
+    def plan(self):
+        """The underlying ``repro.api.Plan`` (the migration path)."""
+        return self._plan
 
     def solve(self, source: int) -> SSSPResult:
-        src_arr = jnp.asarray(source, jnp.int32)
-        tent, outer, inner, over = self._run1(self.backend, src_arr)
-        dist, pred = _finish_pred(tent, self.graph, src_arr, self.config)
-        return SSSPResult(dist, pred, outer, inner, over)
+        from repro.api import SingleSource
+        r = self._plan.solve(SingleSource(source))
+        t = r.telemetry
+        return SSSPResult(r.dist, r.pred, t.buckets, t.inner_iters,
+                          t.overflow)
 
     def solve_many(self, sources) -> SSSPResult:
         """Batched multi-source solve on one device. Returns an
         ``SSSPResult`` whose fields carry a leading batch axis; every
         lane is bitwise identical to the corresponding ``solve``."""
-        srcs = jnp.asarray(sources, jnp.int32)
-        if srcs.ndim != 1:
-            raise ValueError("sources must be a 1-D array of vertex ids")
-        cfg = self.config
-        packed = cfg.pred_mode == "packed"
-        tent, outer, inner, over = self._run_many(self.backend, srcs)
-        dist = _dist_of(tent, packed)
-        if cfg.pred_mode == "none":
-            pred = jnp.full(dist.shape, -1, jnp.int32)
-        elif packed:
-            pred = packing.unpack_pred(tent)
-            pred = jnp.where(dist < INF32, pred, -1)
-            pred = pred.at[jnp.arange(srcs.shape[0]), srcs].set(-1)
-        else:
-            g = self.graph
-            pred = jax.vmap(lambda d, s: pred_argmin(
-                d, g.src, g.dst, g.w, s, n=g.n_nodes))(dist, srcs)
-        return SSSPResult(dist, pred, outer, inner, over)
+        from repro.api import MultiSource
+        r = self._plan.solve(MultiSource(sources))
+        t = r.telemetry
+        return SSSPResult(r.dist, r.pred, t.buckets, t.inner_iters,
+                          t.overflow)
 
 
 def delta_stepping(graph: COOGraph, source: int,
                    config: DeltaConfig = DeltaConfig()) -> SSSPResult:
-    """One-shot convenience wrapper around :class:`DeltaSteppingSolver`.
+    """**Deprecated** one-shot convenience wrapper (prefer
+    ``repro.api.Engine(graph, config).plan().solve(SingleSource(s))``).
     ``config="auto"`` picks Δ from graph statistics (DESIGN.md §7)."""
     return DeltaSteppingSolver(graph, config).solve(source)

@@ -29,8 +29,9 @@ def _serve_sssp(args):
     # --tune = measured search; --tune-cache alone = cache hit or the
     # zero-measurement estimator (same semantics as launch.sssp). The
     # concrete config is always the tuning *base*, so --strategy /
-    # --shards survive tuning as non-searched fields (SSSPServer
-    # resolves whenever tune inputs are present).
+    # --shards survive tuning as non-searched fields (the server's
+    # Engine.plan resolves whenever tune inputs are present, and the
+    # winning TuningRecord attaches to the plan).
     auto = args.tune or args.tune_cache is not None
     config = DeltaConfig(delta=args.delta, strategy=args.strategy,
                          n_shards=args.shards)
@@ -42,8 +43,11 @@ def _serve_sssp(args):
                      tune_cache=args.tune_cache)
     if auto:
         cfg = srv.config
+        rec = srv.plan.record
+        provenance = "none" if rec is None else rec.source
         print(f"[serve] tuned at graph load: Δ={cfg.delta} "
               f"strategy={cfg.strategy} cap={cfg.frontier_cap} "
+              f"record={provenance} "
               f"({time.perf_counter() - t0:.1f}s)")
     srv.submit(SSSPQuery(qid=-1, source=0))
     srv.step()                                  # warm up / compile

@@ -20,6 +20,11 @@ the unified engine, composing with ``--sources`` batching and
       PYTHONPATH=src python -m repro.launch.sssp --graph rmat \\
       --nodes 100000 --strategy sharded_edge --shards 8 --verify
 
+The single-host path routes through the Query/Plan façade
+(``repro.api``, DESIGN.md §10): one ``Engine.plan`` resolves tuning /
+strategy / caps, then queries dispatch on the plan — ``--target T``
+issues an early-exit ``PointToPoint`` query instead of the full solve.
+
 ``--tune`` replaces the hand-picked ``--delta``/``--strategy`` with the
 measured (Δ, backend, packing) search (repro.tune, DESIGN.md §7);
 ``--tune-cache PATH`` persists/reuses tuned records across runs — with
@@ -49,6 +54,9 @@ def main():
     ap.add_argument("--interpret", action="store_true",
                     help="run pallas kernels in interpret mode (CPU)")
     ap.add_argument("--sources", type=int, default=1)
+    ap.add_argument("--target", type=int, default=None,
+                    help="point-to-point query: early-exit solve from "
+                         "source 0 to this vertex (repro.api facade)")
     ap.add_argument("--devices", type=int, default=0,
                     help="model-parallel width (0 = single-device engine)")
     ap.add_argument("--combine", default="reduce_scatter",
@@ -108,48 +116,71 @@ def main():
               f"{dt * 1e3:.1f} ms, buckets={int(outer)}, "
               f"light sweeps={int(inner)}")
     else:
-        from repro.core import DeltaConfig, DeltaSteppingSolver
+        # single-host path: the Query/Plan façade (DESIGN.md §10) —
+        # resolution (tuning, caps) happens once in Engine.plan, solves
+        # dispatch through the query algebra
+        from repro.api import Engine, MultiSource, SingleSource
+        from repro.core import DeltaConfig
         cfg = DeltaConfig(delta=args.delta, strategy=args.strategy,
                           pred_mode="argmin", interpret=args.interpret,
                           n_shards=args.shards)
+        t0 = time.perf_counter()
+        # sources= the ones actually being solved: a tuning-chosen
+        # frontier cap is validated against exactly these
+        plan = Engine(g, cfg, free_mask=free, tune=args.tune,
+                      tune_cache=args.tune_cache).plan(sources=sources)
+        cfg = plan.config
         if args.tune or args.tune_cache:
-            from repro.tune import resolve_config
-            t0 = time.perf_counter()
-            # sources= the ones actually being solved: resolve_config
-            # validates a tuned frontier cap against exactly these
-            cfg = resolve_config(g, cfg, free_mask=free,
-                                 cache_path=args.tune_cache,
-                                 measure=args.tune, sources=sources)
             print(f"[sssp] tuned config: Δ={cfg.delta} "
                   f"strategy={cfg.strategy} cap={cfg.frontier_cap} "
                   f"({time.perf_counter() - t0:.1f}s to tune)")
-        solver = DeltaSteppingSolver(
-            g, cfg, free_mask=free if cfg.strategy == "pallas" else None)
         if cfg.strategy.startswith("sharded"):
             from repro.core import resolve_n_shards
             print(f"[sssp] mesh-sharded relaxation over "
                   f"{resolve_n_shards(cfg.n_shards)} device(s)")
+        if args.target is not None:
+            from repro.api import PointToPoint
+            q = PointToPoint(sources[0], args.target)
+            plan.solve(q)                       # warm up / compile
+            t0 = time.perf_counter()
+            r = plan.solve(q)
+            dt = time.perf_counter() - t0
+            hops = 0 if r.path is None else len(r.path) - 1
+            print(f"[sssp] p2p {sources[0]}->{args.target}: "
+                  f"dist={r.distance} hops={hops} "
+                  f"buckets={int(r.telemetry.buckets)} (early exit), "
+                  f"{dt * 1e3:.1f} ms")
+            if args.verify:
+                from repro.core import dijkstra
+                ref, _ = dijkstra(g, sources[0])
+                ok = int(ref[args.target]) == r.distance
+                print(f"[sssp] verify vs Dijkstra: "
+                      f"{'OK' if ok else 'MISMATCH'}")
+                if not ok:
+                    raise SystemExit(1)
+            return
         if len(sources) > 1:
             # batched multi-source path: one program for all sources
-            solver.solve_many(sources)          # warm up / compile
+            plan.solve(MultiSource(sources))    # warm up / compile
             t0 = time.perf_counter()
-            res = solver.solve_many(sources)
+            res = plan.solve(MultiSource(sources))
             dist = np.asarray(res.dist)
             dt = time.perf_counter() - t0
+            tel = res.telemetry
             print(f"[sssp] Δ={cfg.delta} ({cfg.strategy}, batched x"
                   f"{len(sources)}): {dt * 1e3 / len(sources):.1f} "
-                  f"ms/source, buckets={int(res.outer_iters.max())}, "
-                  f"light sweeps={int(res.inner_iters.max())}")
+                  f"ms/source, buckets={int(tel.buckets.max())}, "
+                  f"light sweeps={int(tel.inner_iters.max())}")
         else:
-            solver.solve(0)            # warm up / compile
+            plan.solve(SingleSource(0))         # warm up / compile
             t0 = time.perf_counter()
-            r = solver.solve(sources[0])
+            r = plan.solve(SingleSource(sources[0]))
             dist = np.asarray(r.dist)[None]
             dt = time.perf_counter() - t0
             print(f"[sssp] Δ={cfg.delta} ({cfg.strategy}): "
                   f"{dt * 1e3:.1f} ms/source, "
-                  f"buckets={int(r.outer_iters)}, "
-                  f"light sweeps={int(r.inner_iters)}")
+                  f"buckets={int(r.telemetry.buckets)}, "
+                  f"light sweeps={int(r.telemetry.inner_iters)}")
 
     if args.verify:
         from repro.core import dijkstra

@@ -6,8 +6,8 @@ idiom —
   (``BatchServer``).
 * SSSP queries: point-to-all / point-to-point shortest-path queries
   against a preprocessed graph, answered in fixed-size microbatches by
-  the unified Δ-stepping engine's batched multi-source program
-  (``SSSPServer`` → ``DeltaSteppingSolver.solve_many``, DESIGN.md §3).
+  the Query/Plan façade's batched multi-source program (``SSSPServer``
+  → ``repro.api.Plan.solve(MultiSource(...))``, DESIGN.md §3/§10).
 """
 from __future__ import annotations
 
@@ -141,8 +141,10 @@ class SSSPQuery:
 
 
 class SSSPServer:
-    """Microbatching SSSP server: queued queries are answered
-    ``batch_size`` at a time by one jitted batched multi-source program.
+    """Microbatching SSSP server — a **deprecated** thin shim over the
+    Query/Plan façade (prefer ``repro.api.Engine(...).plan()`` plus
+    ``MultiSource`` queries; DESIGN.md §10). Queued queries are answered
+    ``batch_size`` at a time by the plan's batched multi-source program.
     Short batches are padded by repeating the last source (the padded
     lanes are discarded), so every step runs the same compiled shape —
     the serving-side counterpart of ``BatchServer``'s fixed slot count.
@@ -150,76 +152,51 @@ class SSSPServer:
     Tuning happens once, at graph-load time: ``config="auto"`` resolves
     (Δ, backend, packing) through the tuning subsystem (cache hit or
     zero-measurement estimator; ``tune=True`` runs the measured search
-    instead) and every subsequent microbatch serves with that tuned
-    config — the search cost amortizes over the query stream
-    (DESIGN.md §7)."""
+    instead) and the resolved ``TuningRecord`` attaches to the plan
+    (``server.plan.record``) — the search cost amortizes over the query
+    stream (DESIGN.md §7). The query stream is unknown at load time, so
+    the plan is built with ``fallback=True``: a microbatch that trips
+    the compacted-frontier overflow flag is re-answered full-width at
+    the façade's single fallback point (tuning may move time, never
+    answers)."""
 
     def __init__(self, graph, config=None, *, batch_size: int = 8,
                  free_mask=None, tune: bool = False,
                  tune_cache: Optional[str] = None):
-        from repro.core import DeltaConfig, DeltaSteppingSolver
+        from repro.api import Engine
+        from repro.core import DeltaConfig
         config = config or DeltaConfig()
-        if isinstance(config, str) and config != "auto":
-            raise ValueError(f"unknown config string {config!r}")
-        if tune or tune_cache is not None or isinstance(config, str):
-            from repro.tune import resolve_config
-            # a concrete config survives as the tuning *base*: its
-            # non-searched fields (pred_mode, n_shards, ...) carry into
-            # the tuned result instead of being silently dropped
-            base = DeltaConfig() if isinstance(config, str) else config
-            # sources=None: the query stream is unknown at load time, so
-            # a tuning-chosen frontier cap is dropped up front (explicit
-            # caps from the caller keep the per-batch fallback below)
-            config = resolve_config(graph, base, free_mask=free_mask,
-                                    cache_path=tune_cache, measure=tune,
-                                    sources=None)
-        self.config = config
+        # a concrete config survives as the tuning *base*: its
+        # non-searched fields (pred_mode, n_shards, ...) carry into the
+        # tuned result instead of being silently dropped
+        self._plan = Engine(graph, config, free_mask=free_mask, tune=tune,
+                            tune_cache=tune_cache).plan(fallback=True)
+        self.config = self._plan.config
         self.graph = graph
         self.free_mask = free_mask
-        self.solver = DeltaSteppingSolver(graph, self.config,
-                                          free_mask=free_mask)
-        self._safe_solver = None      # lazy uncapped fallback (overflow)
         self.batch_size = batch_size
         self.queue: List[SSSPQuery] = []
+
+    @property
+    def plan(self):
+        """The underlying ``repro.api.Plan`` (tuning record included)."""
+        return self._plan
 
     def submit(self, query: SSSPQuery):
         if query.target is not None and self.config.pred_mode == "none":
             raise ValueError("point-to-point queries need a pred_mode")
         self.queue.append(query)
 
-    def _extract_path(self, pred: np.ndarray, query: SSSPQuery):
-        path = [query.target]
-        while pred[path[-1]] >= 0:
-            path.append(int(pred[path[-1]]))
-        if path[-1] != query.source:      # unreachable target
-            return None
-        return path[::-1]
-
     def step(self) -> List[SSSPQuery]:
         """Serve one microbatch; returns the completed queries."""
+        from repro.api import MultiSource, extract_path
         if not self.queue:
             return []
         batch = self.queue[:self.batch_size]
         self.queue = self.queue[self.batch_size:]
         sources = [q.source for q in batch]
         sources += [sources[-1]] * (self.batch_size - len(sources))
-        res = self.solver.solve_many(np.asarray(sources, np.int32))
-        if bool(np.any(np.asarray(res.overflow))):
-            # a tuned frontier_cap was validated against the tuner's
-            # probe sources only; a batch lane that overflows it would
-            # return wrong distances — re-solve full-width (tuning may
-            # move time, never answers)
-            if self._safe_solver is None:
-                from repro.core import DeltaSteppingSolver
-                self._safe_solver = DeltaSteppingSolver(
-                    self.graph,
-                    dataclasses.replace(self.config, frontier_cap=None),
-                    free_mask=self.free_mask)
-            # demote permanently: a query mix that overflowed once would
-            # otherwise pay capped + uncapped solves on every step
-            self.solver = self._safe_solver
-            res = self._safe_solver.solve_many(
-                np.asarray(sources, np.int32))
+        res = self._plan.solve(MultiSource(np.asarray(sources, np.int32)))
         dist = np.asarray(res.dist, np.int64)
         pred = np.asarray(res.pred)
         for i, q in enumerate(batch):
@@ -227,7 +204,8 @@ class SSSPServer:
                 q.dist = dist[i]
             else:
                 q.dist = dist[i, q.target]
-                q.path = self._extract_path(pred[i], q)
+                q.path = extract_path(pred[i], q.source, q.target,
+                                      self.graph.n_nodes)
             q.done = True
         return batch
 

@@ -13,9 +13,13 @@ and should — be chosen from graph structure instead. Three layers:
 * ``cache`` — persistent JSON store of ``TuningRecord``s keyed by
   fingerprint, so repeat workloads skip the search.
 
-``resolve_config`` is the single entry point the engine consults when a
-caller passes ``config="auto"`` (core.delta_stepping, core.backends,
-serve.SSSPServer, launch.sssp).
+``resolve_record`` is the single resolution point the Query/Plan façade
+consults when a caller passes ``config="auto"`` or a tuning base
+(``repro.api.Engine.plan`` — through which the deprecated shims in
+core.delta_stepping, serve.SSSPServer and launch.sssp all route); it
+returns the concrete config *and* the ``TuningRecord`` it came from, so
+tuning evidence attaches to the ``Plan`` that serves with it.
+``resolve_config`` is the config-only wrapper.
 """
 
 from repro.tune.cache import TuningCache
@@ -32,6 +36,7 @@ from repro.tune.search import (
     default_strategies,
     heuristic_record,
     resolve_config,
+    resolve_record,
     tune,
 )
 
@@ -47,5 +52,6 @@ __all__ = [
     "graph_stats",
     "heuristic_record",
     "resolve_config",
+    "resolve_record",
     "tune",
 ]

@@ -342,7 +342,7 @@ def tune(
     return record
 
 
-def resolve_config(
+def resolve_record(
     graph: COOGraph,
     base: Optional[DeltaConfig] = None,
     *,
@@ -350,19 +350,23 @@ def resolve_config(
     cache_path: Optional[str] = None,
     measure: bool = False,
     sources: Optional[Sequence[int]] = (0,),
-) -> DeltaConfig:
-    """The ``config="auto"`` entry point: cache hit → tuned config;
+) -> Tuple[DeltaConfig, TuningRecord]:
+    """The ``config="auto"`` resolution path: cache hit → tuned config;
     otherwise the zero-measurement estimator (or, with ``measure=True``,
     the successive-halving search, persisted when a cache path is
-    given).
+    given). Returns ``(config, record)`` — the concrete operating point
+    plus the ``TuningRecord`` it came from, so the caller (a
+    ``repro.api.Plan``) can attach the tuning evidence to the unit that
+    serves with it.
 
     A tuning-chosen ``frontier_cap`` never reaches the engine
     unvalidated (cache records can come from a same-fingerprint graph
     the cap was never checked on): with ``sources`` given, the cap is
-    re-validated against exactly those sources (one warm solve) and
-    dropped on overflow; with ``sources=None`` — a caller that cannot
-    know its future sources, like the core ``config="auto"`` path — the
-    cap is dropped outright. Tuning may move time, never answers."""
+    re-validated against exactly those sources (one warm solve on the
+    shared ``build_safe_solver`` path) and dropped on overflow; with
+    ``sources=None`` — a caller that cannot know its future sources,
+    like the core ``config="auto"`` path — the cap is dropped outright.
+    Tuning may move time, never answers."""
     base = base if base is not None else DeltaConfig()
     if cache_path is not None or measure:
         from repro.tune.cache import TuningCache
@@ -396,8 +400,32 @@ def resolve_config(
                 cfg, _ = build_safe_solver(
                     graph, cfg, sources=sources, free_mask=free_mask
                 )
-        return cfg
+        return cfg, rec
     # pure-heuristic path: degrees and weights are enough — skip the
     # O(diameter·|E|) hop-radius probe (no cache key to build)
     stats = graph_stats(graph, probe_ecc=False)
-    return heuristic_record(graph, base, stats).to_config(base)
+    rec = heuristic_record(graph, base, stats)
+    return rec.to_config(base), rec
+
+
+def resolve_config(
+    graph: COOGraph,
+    base: Optional[DeltaConfig] = None,
+    *,
+    free_mask=None,
+    cache_path: Optional[str] = None,
+    measure: bool = False,
+    sources: Optional[Sequence[int]] = (0,),
+) -> DeltaConfig:
+    """Config-only wrapper of :func:`resolve_record` (the original
+    ``config="auto"`` entry point; kept for callers that do not track
+    tuning evidence)."""
+    cfg, _ = resolve_record(
+        graph,
+        base,
+        free_mask=free_mask,
+        cache_path=cache_path,
+        measure=measure,
+        sources=sources,
+    )
+    return cfg

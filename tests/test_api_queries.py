@@ -1,0 +1,383 @@
+"""Query/Plan façade tests (repro.api, DESIGN.md §10).
+
+Three contracts:
+
+* **Parity** — ``Plan.solve(SingleSource)`` / ``Plan.solve(MultiSource)``
+  are bitwise identical (dist AND pred — packed (cost, pred) words
+  included) to the seed-era solver composition, re-derived here directly
+  from the module-level jitted drivers the pre-façade
+  ``DeltaSteppingSolver`` owned, across all five backends. The CI
+  ``sharded`` job runs this file under an 8-device host mesh, so the
+  sharded backends are covered with real cross-device collectives.
+* **PointToPoint** — differential vs the heap-Dijkstra oracle on the
+  adversarial COO corpus (zero weights, self-loops, duplicate edges,
+  disconnected tails; shared driver tests/_property_driver.py), plus
+  the early-exit guarantee: strictly fewer buckets than the full solve
+  on a line graph.
+* **BoundedRadius / ManyToMany / fallback** — exactness within the
+  radius, sentinel filtering beyond it, tiled matrix assembly, and the
+  façade's single overflow-fallback point.
+"""
+from functools import partial
+
+import jax.numpy as jnp
+import numpy as np
+
+from _property_driver import drive, null_ctx as _null
+from test_differential import adversarial_coo
+from repro.api import (
+    BoundedRadius,
+    Engine,
+    ManyToMany,
+    MultiSource,
+    PointToPoint,
+    SingleSource,
+)
+from repro.compat import enable_x64
+from repro.core import DeltaConfig, DeltaSteppingSolver, dijkstra
+from repro.core.backends import make_backend
+from repro.core.delta_stepping import (
+    _finish_pred,
+    _finish_pred_many,
+    _run_many_seq,
+    _run_many_vmapped,
+    _run_one,
+)
+from repro.graphs.structures import COOGraph, INF32
+
+drive_seed = partial(
+    drive,
+    strategy=lambda st: st.integers(min_value=0, max_value=2**31 - 1),
+    fallback_draw=lambda rng: int(rng.integers(0, 2**31)))
+
+BACKENDS = ("edge", "ell", "pallas", "sharded_edge", "sharded_ell")
+
+
+def _seed_solve(g, source, cfg):
+    """The pre-façade ``DeltaSteppingSolver.solve`` body, inlined from
+    the module-level drivers it was built on — the parity reference."""
+    backend = make_backend(g, cfg)
+    packed = cfg.pred_mode == "packed"
+    src = jnp.asarray(source, jnp.int32)
+    tent, outer, inner, over = _run_one(backend, src, n=g.n_nodes,
+                                        packed=packed)
+    dist, pred = _finish_pred(tent, g, src, cfg)
+    return dist, pred, outer, inner
+
+
+def _seed_solve_many(g, sources, cfg):
+    """The pre-façade ``solve_many`` body, inlined likewise."""
+    backend = make_backend(g, cfg)
+    packed = cfg.pred_mode == "packed"
+    srcs = jnp.asarray(sources, jnp.int32)
+    many = _run_many_vmapped if backend.supports_vmap else _run_many_seq
+    tent, outer, inner, over = many(backend, srcs, n=g.n_nodes,
+                                    packed=packed)
+    dist, pred = _finish_pred_many(tent, g, srcs, cfg)
+    return dist, pred, outer, inner
+
+
+def _line_graph(n, w=10):
+    """0 -> 1 -> ... -> n-1, unit chain of weight-w edges."""
+    src = np.arange(n - 1, dtype=np.int32)
+    dst = src + 1
+    ws = np.full(n - 1, w, np.int32)
+    return COOGraph(src=src, dst=dst, w=ws, n_nodes=n)
+
+
+def _edge_weights(g):
+    """min parallel-edge weight per (u, v) — path validity oracle."""
+    ew = {}
+    for s, d, w in zip(np.asarray(g.src), np.asarray(g.dst),
+                       np.asarray(g.w)):
+        key = (int(s), int(d))
+        ew[key] = min(ew.get(key, 1 << 62), int(w))
+    return ew
+
+
+# ---------------------------------------------------------------------------
+# parity: the façade vs the seed solver composition, all five backends
+# ---------------------------------------------------------------------------
+
+def test_single_source_parity_all_backends():
+    """Plan.solve(SingleSource) is bitwise identical — dist, pred, and
+    iteration counters — to the seed driver composition on every
+    backend, for argmin and packed pred words."""
+    g, source, _ = adversarial_coo(12345)
+    for pred_mode in ("argmin", "packed"):
+        ctx = enable_x64() if pred_mode == "packed" else _null()
+        with ctx:
+            for strategy in BACKENDS:
+                cfg = DeltaConfig(delta=7, strategy=strategy,
+                                  pred_mode=pred_mode, interpret=True)
+                dist0, pred0, outer0, inner0 = _seed_solve(g, source, cfg)
+                plan = Engine(g, cfg).plan()
+                res = plan.solve(SingleSource(source))
+                tag = (strategy, pred_mode)
+                np.testing.assert_array_equal(
+                    np.asarray(res.dist), np.asarray(dist0), err_msg=str(tag))
+                np.testing.assert_array_equal(
+                    np.asarray(res.pred), np.asarray(pred0), err_msg=str(tag))
+                assert int(res.telemetry.buckets) == int(outer0), tag
+                assert int(res.telemetry.inner_iters) == int(inner0), tag
+                # and the deprecated shim returns the same SSSPResult
+                legacy = DeltaSteppingSolver(g, cfg).solve(source)
+                np.testing.assert_array_equal(
+                    np.asarray(legacy.dist), np.asarray(dist0),
+                    err_msg=str(tag))
+                np.testing.assert_array_equal(
+                    np.asarray(legacy.pred), np.asarray(pred0),
+                    err_msg=str(tag))
+
+
+def test_multi_source_parity_all_backends():
+    """Plan.solve(MultiSource) is bitwise identical to the seed
+    solve_many composition on every backend (packed words included)."""
+    g, source, _ = adversarial_coo(54321)
+    srcs = np.asarray([source, 0, g.n_nodes - 1], np.int32)
+    for pred_mode in ("argmin", "packed"):
+        ctx = enable_x64() if pred_mode == "packed" else _null()
+        with ctx:
+            for strategy in BACKENDS:
+                cfg = DeltaConfig(delta=7, strategy=strategy,
+                                  pred_mode=pred_mode, interpret=True)
+                dist0, pred0, outer0, inner0 = _seed_solve_many(g, srcs, cfg)
+                res = Engine(g, cfg).plan().solve(MultiSource(srcs))
+                tag = (strategy, pred_mode)
+                np.testing.assert_array_equal(
+                    np.asarray(res.dist), np.asarray(dist0), err_msg=str(tag))
+                np.testing.assert_array_equal(
+                    np.asarray(res.pred), np.asarray(pred0), err_msg=str(tag))
+                np.testing.assert_array_equal(
+                    np.asarray(res.telemetry.buckets), np.asarray(outer0),
+                    err_msg=str(tag))
+                legacy = DeltaSteppingSolver(g, cfg).solve_many(srcs)
+                np.testing.assert_array_equal(
+                    np.asarray(legacy.dist), np.asarray(dist0),
+                    err_msg=str(tag))
+                np.testing.assert_array_equal(
+                    np.asarray(legacy.pred), np.asarray(pred0),
+                    err_msg=str(tag))
+
+
+# ---------------------------------------------------------------------------
+# PointToPoint: differential vs the oracle on the adversarial corpus
+# ---------------------------------------------------------------------------
+
+@drive_seed(max_examples=20, fallback_examples=8)
+def test_point_to_point_matches_oracle(seed):
+    """Early-exit p2p distance equals heap Dijkstra on adversarial COO
+    graphs for every backend; returned paths are real graph paths whose
+    weights sum to the distance (checked where the pred mode guarantees
+    tree validity — packed always, argmin on zero-weight-free cases)."""
+    g, source, w_lo = adversarial_coo(seed)
+    dref, _ = dijkstra(g, source)
+    rng = np.random.default_rng(seed)
+    # one reachable-ish target, one guaranteed-disconnected tail target
+    targets = (int(rng.integers(0, g.n_nodes)), g.n_nodes - 1)
+    ew = _edge_weights(g)
+    for pred_mode in ("argmin", "packed"):
+        ctx = enable_x64() if pred_mode == "packed" else _null()
+        with ctx:
+            for strategy in BACKENDS:
+                cfg = DeltaConfig(delta=7, strategy=strategy,
+                                  pred_mode=pred_mode, interpret=True)
+                plan = Engine(g, cfg).plan()
+                for target in targets:
+                    res = plan.solve(PointToPoint(source, target))
+                    tag = (seed, strategy, pred_mode, target)
+                    assert res.distance == int(dref[target]), tag
+                    if res.distance >= int(INF32):
+                        assert res.path is None, tag
+                        continue
+                    if pred_mode == "packed" or w_lo >= 1:
+                        assert res.path is not None, tag
+                        assert res.path[0] == source, tag
+                        assert res.path[-1] == target, tag
+                        acc = 0
+                        for u, v in zip(res.path, res.path[1:]):
+                            assert (u, v) in ew, tag
+                            acc += ew[(u, v)]
+                        assert acc == res.distance, tag
+
+
+def test_point_to_point_early_exit_line_graph():
+    """On a line graph, a near target must settle after inspecting
+    strictly fewer buckets (and fewer inner iterations) than the full
+    solve — the measurable content of the Kainer–Träff early exit."""
+    g = _line_graph(128, w=10)
+    cfg = DeltaConfig(delta=10, strategy="edge", pred_mode="argmin")
+    plan = Engine(g, cfg).plan()
+    full = plan.solve(SingleSource(0))
+    near = plan.solve(PointToPoint(0, 5))
+    assert near.distance == 50
+    assert near.path == [0, 1, 2, 3, 4, 5]
+    assert int(near.telemetry.buckets) < int(full.telemetry.buckets)
+    assert int(near.telemetry.inner_iters) < int(full.telemetry.inner_iters)
+    # early exit must never be wrong for the farthest vertex either
+    far = plan.solve(PointToPoint(0, 127))
+    assert far.distance == 1270
+
+
+def test_point_to_point_source_is_target():
+    g = _line_graph(16)
+    plan = Engine(g, DeltaConfig(delta=10)).plan()
+    res = plan.solve(PointToPoint(3, 3))
+    assert res.distance == 0
+    assert res.path == [3]
+
+
+# ---------------------------------------------------------------------------
+# BoundedRadius
+# ---------------------------------------------------------------------------
+
+def test_bounded_radius_exact_within_filtered_beyond():
+    """dist <= r entries equal the oracle; everything beyond carries the
+    INF32 / -1 sentinels; the solve stops before the full bucket
+    schedule on a line graph."""
+    from repro.graphs import watts_strogatz
+    g = watts_strogatz(400, 6, 0.05, seed=3)
+    dref, _ = dijkstra(g, 0)
+    fin = dref < int(INF32)
+    r = int(np.median(dref[fin]))
+    for strategy in ("edge", "ell", "sharded_edge"):
+        plan = Engine(g, DeltaConfig(delta=10, strategy=strategy)).plan()
+        res = plan.solve(BoundedRadius(0, r))
+        dist = np.asarray(res.dist, np.int64)
+        pred = np.asarray(res.pred)
+        expected = np.where(dref <= r, dref, int(INF32))
+        np.testing.assert_array_equal(dist, expected, err_msg=strategy)
+        assert (pred[dref > r] == -1).all(), strategy
+    # early exit on the line graph: radius 50 of 1270 → few buckets
+    line = _line_graph(128, w=10)
+    plan = Engine(line, DeltaConfig(delta=10)).plan()
+    full = plan.solve(SingleSource(0))
+    ball = plan.solve(BoundedRadius(0, 50))
+    assert int(ball.telemetry.buckets) < int(full.telemetry.buckets)
+    assert int((np.asarray(ball.dist) < int(INF32)).sum()) == 6
+
+
+def test_bounded_radius_zero():
+    g = _line_graph(8, w=5)
+    plan = Engine(g, DeltaConfig(delta=5)).plan()
+    res = plan.solve(BoundedRadius(2, 0))
+    dist = np.asarray(res.dist)
+    assert dist[2] == 0
+    assert (np.delete(dist, 2) == int(INF32)).all()
+
+
+# ---------------------------------------------------------------------------
+# ManyToMany
+# ---------------------------------------------------------------------------
+
+def test_many_to_many_matrix_matches_oracle():
+    from repro.graphs import watts_strogatz
+    g = watts_strogatz(200, 6, 0.05, seed=7)
+    sources = [0, 3, 9, 14, 77]
+    targets = [1, 2, 50, 199]
+    for tile in (2, 8):                      # uneven + oversize tiles
+        res = Engine(g, DeltaConfig(delta=10)).plan().solve(
+            ManyToMany(sources, targets, tile=tile))
+        assert res.matrix.shape == (len(sources), len(targets))
+        for i, s in enumerate(sources):
+            dref, _ = dijkstra(g, s)
+            np.testing.assert_array_equal(res.matrix[i], dref[targets],
+                                          err_msg=f"tile={tile} row {i}")
+
+
+def test_many_to_many_includes_disconnected():
+    g, source, _ = adversarial_coo(99)       # has a disconnected tail
+    res = Engine(g, DeltaConfig(delta=7)).plan().solve(
+        ManyToMany([source], [g.n_nodes - 1], tile=1))
+    dref, _ = dijkstra(g, source)
+    assert res.matrix[0, 0] == int(dref[g.n_nodes - 1])
+
+
+# ---------------------------------------------------------------------------
+# the one overflow-fallback point
+# ---------------------------------------------------------------------------
+
+def test_fallback_reanswers_and_demotes():
+    """A capped plan with fallback=True re-answers an overflowing query
+    full-width, marks the telemetry, and demotes permanently; with
+    fallback=False the flag is only reported (legacy behavior)."""
+    from repro.graphs import watts_strogatz
+    g = watts_strogatz(300, 6, 0.05, seed=0)
+    dref, _ = dijkstra(g, 0)
+    cfg = DeltaConfig(delta=100, strategy="ell", frontier_cap=2,
+                      pred_mode="none")
+    plan = Engine(g, cfg).plan(fallback=True)
+    res = plan.solve(SingleSource(0))
+    assert res.telemetry.fallback
+    np.testing.assert_array_equal(np.asarray(res.dist, np.int64), dref)
+    assert plan.explain()["fallback_taken"]
+    # demoted: later queries answer full-width directly
+    res2 = plan.solve(MultiSource([0, 1]))
+    assert res2.telemetry.fallback
+    np.testing.assert_array_equal(np.asarray(res2.dist[0], np.int64), dref)
+    # parity default: flag reported, answer left to the caller
+    raw = Engine(g, cfg).plan().solve(SingleSource(0))
+    assert bool(np.asarray(raw.telemetry.overflow))
+    assert not raw.telemetry.fallback
+
+
+def test_query_validation_rejects_bad_ids():
+    """Out-of-range vertex ids must raise, not silently return all-INF
+    (the jitted scatter drops OOB indices) or early-exit on a clamped
+    gather; tile=0 must hit its own ValueError, not the default."""
+    import pytest
+    g = _line_graph(16)
+    plan = Engine(g, DeltaConfig(delta=10)).plan()
+    with pytest.raises(ValueError, match="out of range"):
+        plan.solve(SingleSource(16))
+    with pytest.raises(ValueError, match="out of range"):
+        plan.solve(SingleSource(-1))
+    with pytest.raises(ValueError, match="out of range"):
+        plan.solve(MultiSource([0, 16]))
+    with pytest.raises(ValueError, match="out of range"):
+        plan.solve(PointToPoint(0, 16))
+    with pytest.raises(ValueError, match="out of range"):
+        plan.solve(BoundedRadius(16, 5))
+    with pytest.raises(ValueError, match="out of range"):
+        plan.solve(ManyToMany([0], [16]))
+    with pytest.raises(ValueError, match="tile must be >= 1"):
+        plan.solve(ManyToMany([0], [1], tile=0))
+    with pytest.raises(ValueError, match="radius"):
+        plan.solve(BoundedRadius(0, -1))
+
+
+def test_solver_shim_ignores_cache_for_concrete_config(tmp_path):
+    """Legacy semantics preserved exactly: a concrete config a caller
+    pinned is never overwritten by a cached tuning record — tune_cache
+    is consulted for config="auto" only (the old _resolve_auto
+    contract)."""
+    import json
+    from repro.tune import TuningRecord, fingerprint, graph_stats
+    from repro.graphs import watts_strogatz
+    g = watts_strogatz(200, 6, 0.05, seed=0)
+    fp = fingerprint(graph_stats(g))
+    path = tmp_path / "cache.json"
+    rec = TuningRecord(fingerprint=fp, delta=99, strategy="ell",
+                       frontier_cap=None, source="measured")
+    path.write_text(json.dumps({"version": 1,
+                                "records": {fp: rec.to_json()}}))
+    pinned = DeltaConfig(delta=5, strategy="edge")
+    solver = DeltaSteppingSolver(g, pinned, tune_cache=str(path))
+    assert solver.config == pinned              # cache not consulted
+    auto = DeltaSteppingSolver(g, "auto", tune_cache=str(path))
+    assert auto.config.delta == 99              # cache hit for "auto"
+
+
+def test_plan_attaches_tuning_record(tmp_path):
+    """A Plan resolved through the tuning subsystem carries the record
+    it came from — tuning evidence attaches to the serving unit."""
+    from repro.graphs import watts_strogatz
+    g = watts_strogatz(300, 6, 0.05, seed=0)
+    plan = Engine(g, "auto",
+                  tune_cache=str(tmp_path / "t.json")).plan()
+    assert plan.record is not None
+    assert plan.record.source == "heuristic"
+    assert plan.config.delta == plan.record.delta
+    assert plan.explain()["tuning_source"] == "heuristic"
+    # no tuning inputs → no record
+    assert Engine(g, DeltaConfig(delta=5)).plan().record is None
