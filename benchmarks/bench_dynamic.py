@@ -1,0 +1,127 @@
+"""Dynamic-update benchmarks: warm-start re-solve vs cold solve
+(repro.dynamic, DESIGN.md §11).
+
+The production claim being measured: after a k-edge cost perturbation,
+``plan.resolve(warm=True)`` repairs the resident answer instead of
+re-solving from scratch, and wins by a growing margin as k shrinks —
+the k-sweep records 0.1% and 1% of |E| on the paper's small-world
+family (mixed-sign, in-range perturbations under pred_mode='argmin',
+whose tree the increase cone needs), plus a long-diameter lattice row
+showing the unsettled-only bucket scan skipping the untouched prefix
+of the bucket sequence.
+
+Protocol notes (bench-gate noise discipline): every perturbation batch
+is deterministic (seeded ids + absolute replacement weights), batches
+cycle across reps, and one full warm-up pass over the batch cycle
+pre-compiles every repair-twin cap class before timing starts — cap
+compiles are a once-per-workload cost, not a per-update cost, and must
+not pollute the steady-state medians the gate compares.
+"""
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from benchmarks.common import row, scaled, time_fn
+from repro.api import Engine, SingleSource
+from repro.core import DeltaConfig
+from repro.graphs import square_lattice, watts_strogatz
+
+
+def _batches(rng, n_edges, w0, k, n_batches=6):
+    """Deterministic mixed-sign batches: each id set carries two
+    distinct absolute weight assignments (phase A, then an elementwise-
+    different phase B), and the cycle interleaves them — so re-applying
+    the cycle always performs a *real* weight change, never a no-op the
+    warm path would short-circuit (which would fake the timing)."""
+    sets = []
+    for _ in range(n_batches):
+        ids = rng.choice(n_edges, size=k, replace=False)
+        wa = np.clip(w0[ids] + rng.integers(-5, 6, size=k), 1, 20)
+        wb = np.where(wa < 20, wa + 1, wa - 1)
+        sets.append((ids, wa, wb))
+    return [(ids, wa) for ids, wa, _ in sets] + \
+           [(ids, wb) for ids, _, wb in sets]
+
+
+def main():
+    n = scaled(20_000)
+    g = watts_strogatz(n, 12, 1e-2, seed=0)
+    e = g.n_edges
+    plan = Engine(g, DeltaConfig(delta=10, pred_mode="argmin")).plan()
+    plan.solve(SingleSource(0))
+
+    rng = np.random.default_rng(5)
+    w0 = np.asarray(g.w)
+    ks = {"k0.1pct": max(1, e // 1000), "k1pct": max(2, e // 100)}
+    cycles = {
+        name: itertools.cycle(_batches(rng, e, w0, k))
+        for name, k in ks.items()
+    }
+
+    def bump(cycle, warm):
+        ids, neww = next(cycle)
+        plan.update(ids, neww)
+        return plan.resolve(warm=warm)
+
+    # cold reference: update + full re-solve per call (the pre-dynamic
+    # serving reality), on the same batch protocol
+    cold_cycle = itertools.cycle(_batches(rng, e, w0, ks["k1pct"]))
+    t_cold = time_fn(lambda: bump(cold_cycle, False).dist)
+    b_cold = int(plan.resolve(warm=False).telemetry.buckets)
+    row("dynamic/smallworld/cold_resolve", t_cold,
+        f"n={n};edges={e};buckets={b_cold}")
+
+    for name, k in ks.items():
+        cycle = cycles[name]
+        # warm-up: two full cycles. The first leaves the weight state
+        # periodic; the second visits every periodic batch *transition*
+        # once, compiling every repair-twin cap class the timed reps can
+        # encounter (a cap class first seen mid-measurement would charge
+        # a one-time XLA compile to the steady-state median)
+        for _ in range(24):
+            bump(cycle, True)
+        res = bump(cycle, True)
+        assert res.telemetry.repaired, "no-op batch would fake the timing"
+        t_warm = time_fn(lambda: bump(cycle, True).dist)
+        # the k0.1pct row sits at single-digit ms in smoke mode — below
+        # reliable gate territory on shared runners; the speedup itself
+        # is the record
+        row(f"dynamic/smallworld/warm_{name}", t_warm,
+            f"k={k};speedup={t_cold / t_warm:.2f};"
+            f"repaired={res.telemetry.repaired};"
+            f"buckets={int(res.telemetry.buckets)}/{b_cold}",
+            gate=(name != "k0.1pct"))
+
+    # long-diameter lattice: a far-end perturbation exercises the
+    # unsettled-only next-bucket scan — warm visits a handful of
+    # buckets out of hundreds
+    side = int(np.sqrt(scaled(40_000)))
+    lat = square_lattice(side, weighted=True)
+    lplan = Engine(lat, DeltaConfig(delta=10, pred_mode="argmin")).plan()
+    lplan.solve(SingleSource(0))
+    t_lcold = time_fn(lambda: lplan.resolve(warm=False).dist)
+    lb_cold = int(lplan.resolve(warm=False).telemetry.buckets)
+    far_edge = int(np.argmax(np.asarray(lat.dst)))
+    wf = int(np.asarray(lat.w)[far_edge])
+    flip = itertools.cycle([wf + 7, wf])          # increase, restore, ...
+
+    def far_bump():
+        lplan.update([far_edge], [next(flip)])
+        return lplan.resolve(warm=True)
+
+    far_bump()                                     # compile warm-up
+    res = far_bump()
+    t_lwarm = time_fn(lambda: far_bump().dist)
+    row("dynamic/lattice/warm_far_edge", t_lwarm,
+        f"speedup={t_lcold / t_lwarm:.2f};"
+        f"buckets={int(res.telemetry.buckets)}/{lb_cold};"
+        f"repaired={res.telemetry.repaired}",
+        gate=False)  # single-digit ms: below reliable gate territory
+    row("dynamic/lattice/cold_resolve", t_lcold,
+        f"side={side};buckets={lb_cold}")
+
+
+if __name__ == "__main__":
+    main()

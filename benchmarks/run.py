@@ -31,6 +31,7 @@ def main(argv=None) -> int:
 
     from benchmarks import (
         bench_delta_sweep,
+        bench_dynamic,
         bench_gamemap,
         bench_multisource,
         bench_preprocess,
@@ -45,7 +46,8 @@ def main(argv=None) -> int:
     modules = {}
     for mod in (bench_smallworld, bench_delta_sweep, bench_scaling,
                 bench_preprocess, bench_rmat, bench_gamemap,
-                bench_multisource, bench_sharded, bench_queries):
+                bench_multisource, bench_sharded, bench_queries,
+                bench_dynamic):
         modules[mod.__name__.rsplit(".", 1)[-1].removeprefix("bench_")] = mod
     if args.only is not None:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -1,13 +1,14 @@
-"""Quickstart: the Query/Plan façade (repro.api, DESIGN.md §10) on a
-small-world graph — plan once, then dispatch every query kind against
+"""Quickstart: the Query/Plan façade (repro.api, DESIGN.md §10/§11) on
+a small-world graph — plan once, then dispatch every query kind against
 the same pre-lowered engine; verify against Dijkstra.
 
     PYTHONPATH=src python examples/quickstart.py
 
-The pre-façade entry points (``repro.core.DeltaSteppingSolver``,
-``delta_stepping``, ``serve.SSSPServer``) survive as deprecated thin
-shims over this API with bitwise-identical results — migrate to
-``Engine(...).plan()`` + query objects.
+This script is façade-only and runs clean under
+``-W error::DeprecationWarning`` (CI enforces it). The pre-façade entry
+points (``repro.core.DeltaSteppingSolver``, ``delta_stepping``,
+``serve.SSSPServer``) survive as deprecated thin shims with
+bitwise-identical results, but new code should never import them.
 """
 import numpy as np
 
@@ -18,8 +19,10 @@ from repro.api import (
     MultiSource,
     PointToPoint,
     SingleSource,
+    UpdateBatch,
 )
 from repro.core import DeltaConfig, dijkstra
+from repro.dynamic import apply_weight_update
 from repro.graphs import watts_strogatz
 
 # the paper's small-world family: ring lattice + random rewiring
@@ -86,7 +89,8 @@ print(f"config='auto': Δ={auto_plan.config.delta} "
 # mesh-sharded backend (DESIGN.md §9): relaxation partitioned over every
 # local device under shard_map, tentative distances merged with an
 # all-reduce min each sweep — bitwise identical to single-device for
-# any shard count. Run under
+# any shard count, and a first-class façade citizen like every other
+# strategy. Run under
 #   XLA_FLAGS=--xla_force_host_platform_device_count=8
 # to fake an 8-device host mesh on CPU, or use the CLI:
 #   python -m repro.launch.sssp --strategy sharded_edge --verify
@@ -100,9 +104,19 @@ assert np.array_equal(np.asarray(res_sh.pred), np.asarray(res.pred))
 print(f"sharded_edge over {jax.device_count()} device(s): "
       f"same distances ✓")
 
-# deprecated alias, kept bitwise-identical (migration safety net):
-from repro.core import DeltaSteppingSolver
-
-legacy = DeltaSteppingSolver(g, DeltaConfig(delta=10, pred_mode="argmin"))
-assert np.array_equal(np.asarray(legacy.solve(0).dist), dist)
-print("deprecated DeltaSteppingSolver shim: same distances ✓")
+# dynamic edge costs (repro.dynamic, DESIGN.md §11): traffic weights
+# change, topology doesn't. update() swaps costs on the resident plan;
+# resolve(warm=True) repairs from the previous answer — decreases drop
+# into their new bucket, increases reset the predecessor-tree cone —
+# and is bitwise identical to a cold solve of the updated graph.
+rng = np.random.default_rng(0)
+ids = rng.choice(g.n_edges, size=g.n_edges // 100, replace=False)
+new_w = np.clip(np.asarray(plan.graph.w)[ids]
+                + rng.integers(-5, 6, size=ids.size), 1, None)
+warm = plan.solve(UpdateBatch(ids, new_w))
+cold_ref, _ = dijkstra(apply_weight_update(g, ids, new_w), 0)
+assert np.array_equal(np.asarray(warm.dist, np.int64), cold_ref)
+print(f"dynamic update of {ids.size} edges: warm re-solve repaired "
+      f"{warm.telemetry.repaired} vertices over "
+      f"{int(warm.telemetry.buckets)} buckets "
+      f"(cold solve: {int(res.telemetry.buckets)}) ✓")

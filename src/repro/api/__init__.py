@@ -1,19 +1,22 @@
 """Query/Plan façade — the public entry point of the Δ-stepping engine
-(DESIGN.md §10).
+(DESIGN.md §10, §11).
 
-    from repro.api import Engine, SingleSource, PointToPoint
+    from repro.api import Engine, SingleSource, PointToPoint, UpdateBatch
 
     plan = Engine(graph, config="auto").plan()
     full = plan.solve(SingleSource(0))           # dist/pred + telemetry
     hop = plan.solve(PointToPoint(0, 42))        # early-exit distance+path
+    plan.update(edge_ids, new_weights)           # dynamic edge costs ...
+    res = plan.resolve(warm=True)                # ... warm-start re-solve
 
 ``Engine`` resolves tuning / strategy / caps exactly once per plan;
 ``Plan.solve`` dispatches the query algebra (``SingleSource``,
-``MultiSource``, ``PointToPoint``, ``BoundedRadius``, ``ManyToMany``)
-onto pre-lowered jitted drivers shared with every other plan of the
-same shape. The pre-façade entry points — ``core.DeltaSteppingSolver``,
-``core.delta_stepping``, ``serve.SSSPServer`` — survive as deprecated
-thin shims over this package with bitwise-identical results.
+``MultiSource``, ``PointToPoint``, ``BoundedRadius``, ``ManyToMany``,
+``UpdateBatch``) onto pre-lowered jitted drivers shared with every
+other plan of the same shape. The pre-façade entry points —
+``core.DeltaSteppingSolver``, ``core.delta_stepping``,
+``serve.SSSPServer`` — survive as deprecated thin shims over this
+package with bitwise-identical results.
 """
 
 from repro.api.engine import Engine, Plan
@@ -32,6 +35,7 @@ from repro.api.queries import (
     SingleSource,
     SingleSourceResult,
     Telemetry,
+    UpdateBatch,
 )
 
 __all__ = [
@@ -50,5 +54,6 @@ __all__ = [
     "SingleSource",
     "SingleSourceResult",
     "Telemetry",
+    "UpdateBatch",
     "extract_path",
 ]

@@ -26,6 +26,15 @@ twin plan and the plan demotes to it permanently — capped solves may
 move time, never answers. With ``fallback=False`` (the parity default)
 the flag is reported in the result telemetry and the caller decides,
 exactly like the pre-façade solver.
+
+Dynamic graphs (repro.dynamic, DESIGN.md §11): a plan is also the unit
+of *residency*. Solving ``SingleSource`` keeps the converged answer and
+a weight snapshot on the plan; ``plan.update(edge_ids, new_weights)``
+swaps edge costs (topology fixed), and ``plan.resolve(warm=True)``
+re-solves the resident problem by warm-start repair — bitwise identical
+to a cold solve of the updated graph, at the cost of the repair cone
+instead of the whole instance. ``plan.solve(UpdateBatch(...))`` is the
+query-algebra packaging of the same pair.
 """
 
 from __future__ import annotations
@@ -52,6 +61,7 @@ from repro.api.queries import (
     SingleSource,
     SingleSourceResult,
     Telemetry,
+    UpdateBatch,
 )
 from repro.core.backends import dist_of, make_backend
 from repro.core.delta_stepping import (
@@ -64,7 +74,10 @@ from repro.core.delta_stepping import (
     _run_one,
     _run_one_bounded,
     _run_one_p2p,
+    _run_one_warm,
+    pred_argmin,
 )
+from repro.dynamic import Resident, apply_weight_update, plan_repair
 from repro.graphs.structures import COOGraph, INF32
 
 
@@ -92,7 +105,26 @@ class Plan:
     """A compiled operating point for one graph: resolved config,
     relaxation backend, and partially-applied module-level jitted
     drivers for every query kind. Built by ``Engine.plan``; solvable
-    immediately and repeatedly via ``solve(query)``."""
+    immediately and repeatedly via ``solve(query)``, and updatable in
+    place for dynamic edge costs via ``update`` / ``resolve``.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.api import Engine, SingleSource
+    >>> from repro.core import DeltaConfig
+    >>> from repro.graphs.structures import COOGraph
+    >>> g = COOGraph(jnp.array([0, 1], jnp.int32),
+    ...              jnp.array([1, 2], jnp.int32),
+    ...              jnp.array([2, 3], jnp.int32), 3)
+    >>> plan = Engine(g, DeltaConfig(delta=4, pred_mode="argmin")).plan()
+    >>> res = plan.solve(SingleSource(0))
+    >>> [int(d) for d in res.dist]
+    [0, 2, 5]
+    >>> plan.update([0], [9]) is plan       # edge 0->1 now costs 9
+    True
+    >>> warm = plan.resolve(warm=True)      # repair, not a cold re-solve
+    >>> [int(d) for d in warm.dist], bool(warm.telemetry.warm)
+    ([0, 9, 12], True)
+    """
 
     def __init__(
         self,
@@ -118,10 +150,20 @@ class Plan:
         self._run_many = partial(many, n=n, packed=packed)
         self._run_p2p = partial(_run_one_p2p, n=n, packed=packed)
         self._run_bounded = partial(_run_one_bounded, n=n, packed=packed)
+        self._run_warm = partial(_run_one_warm, n=n, packed=packed)
         # the one overflow-fallback point: only meaningful when a capped
         # compaction can actually overflow
         self._fallback = bool(fallback) and config.frontier_cap is not None
         self._demoted: Optional[Plan] = None
+        # dynamic residency (repro.dynamic): the last SingleSource answer
+        # plus the weight snapshot it was solved against
+        self._resident: Optional[Resident] = None
+        # warm-repair twin backend cache: (cap, graph version) -> backend
+        self._graph_version = 0
+        self._repair_twin = None
+        self._repair_twin_key = None
+        self._twin_width = None   # weight-independent ELL pad width
+        self._twin_cap_floor = 64  # escalates on twin overflow (sticky)
 
     # -- the one public operation -------------------------------------------
 
@@ -130,7 +172,16 @@ class Plan:
         the compacted-frontier overflow flag is re-answered by the
         full-width twin plan (and the plan demotes to it permanently —
         a query mix that overflowed once would otherwise pay capped +
-        uncapped solves on every call)."""
+        uncapped solves on every call).
+
+        ``UpdateBatch`` is the one query kind that mutates the plan: it
+        routes through ``update`` + ``resolve`` and does not participate
+        in overflow demotion (the warm contract itself refuses an
+        overflowed resident state, and the overflow flag of the re-solve
+        is reported in its telemetry)."""
+        if isinstance(query, UpdateBatch):
+            self.update(query.edge_ids, query.new_weights)
+            return self.resolve(warm=query.warm)
         if self._demoted is not None:
             return _mark_fallback(self._demoted._dispatch(query))
         res = self._dispatch(query)
@@ -141,8 +192,190 @@ class Plan:
                 free_mask=self.free_mask,
                 record=self.record,
             )
+            # residency survives demotion: the resident answer was
+            # solved on the same graph/pred_mode (only the cap differs),
+            # so update/resolve keep working after an overflow demotes
+            self._demoted._resident = self._resident
             res = _mark_fallback(self._demoted._dispatch(query))
         return res
+
+    # -- dynamic updates (repro.dynamic, DESIGN.md §11) ----------------------
+
+    def update(self, edge_ids, new_weights) -> "Plan":
+        """Apply an edge-cost update batch to the plan in place: swap
+        weights (topology fixed), rebuild the relaxation backend on the
+        updated graph, and leave the resident answer untouched until the
+        next ``resolve`` diffs against its snapshot — so several update
+        batches between resolves compose naturally. Returns ``self``.
+
+        The tuning record attached at plan time stays attached: the
+        cache fingerprint keys on structural statistics and the weight
+        *range*, so in-range cost churn reuses the record
+        (tests/test_dynamic.py asserts this)."""
+        if self.free_mask is not None and self.config.strategy == "pallas":
+            raise ValueError(
+                "grid-stencil (game-map) plans take their costs from "
+                "DeltaConfig.grid_costs, not the COO weight array — "
+                "edge-weight updates do not apply to them"
+            )
+        self.graph = apply_weight_update(self.graph, edge_ids, new_weights)
+        self.backend = self._rebuild_backend()
+        self._graph_version += 1
+        if self._demoted is not None:
+            self._demoted.update(edge_ids, new_weights)
+        return self
+
+    def _rebuild_backend(self):
+        """Backend over the updated weights. The ELL-family strategies
+        pad their light/heavy blocks to the tightest per-block width by
+        default — a width that *moves with edge costs* (the split is
+        w <= Δ), which would retrace the jitted drivers on every update
+        batch. Rebuilds pin the weight-independent full adjacency
+        degree instead: the first update may recompile once (wider
+        shapes than the plan-time build), every later one reuses it.
+        ``sharded_ell`` keeps the default partition build and may
+        retrace when the split widths move."""
+        if self.config.strategy == "ell":
+            from repro.core.backends import EllBackend
+
+            return EllBackend.build(
+                self.graph, self.config, max_deg=self._adjacency_width()
+            )
+        if self.config.strategy == "pallas" and self.free_mask is None:
+            from repro.core.backends import PallasEllBackend
+
+            return PallasEllBackend.build(
+                self.graph, self.config, max_deg=self._adjacency_width()
+            )
+        return make_backend(self.graph, self.config, free_mask=self.free_mask)
+
+    def _adjacency_width(self) -> int:
+        """Max out-degree — the weight-independent ELL pad width
+        (topology never changes, so compute once per plan)."""
+        if self._twin_width is None:
+            deg = np.bincount(
+                np.asarray(self.graph.src), minlength=self.graph.n_nodes
+            )
+            self._twin_width = max(1, int(deg.max())) if deg.size else 1
+        return self._twin_width
+
+    def _warm_backend(self, repaired: int):
+        """Backend for a warm repair solve. Repair frontiers are tiny
+        (the whole point), so for the single-device strategies the sweep
+        runs on a frontier-compacted ELL twin whose capacity is a small
+        power-of-two head-room over the seed count — O(cap·deg) work per
+        sweep instead of O(|E|). Safe because the overflow flag guards a
+        full-width re-run in ``resolve``, and *exact* because every
+        warm-eligible mode has a schedule-free fixed point (dist always;
+        packed words on the canonical class — DESIGN.md §11), so the
+        twin converges to bitwise the same answer as the plan's own
+        backend. Sharded/pallas plans keep their own backend."""
+        if self.config.strategy not in ("edge", "ell"):
+            return self.backend
+        n = self.graph.n_nodes
+        cap = self._twin_cap_floor
+        while cap < repaired * 2:
+            cap *= 2
+        own_cap = self.config.frontier_cap or n
+        if cap >= n or (self.config.strategy == "ell" and cap >= own_cap):
+            return self.backend
+        key = (cap, self._graph_version)
+        if self._repair_twin_key != key:
+            from repro.core.backends import EllBackend
+
+            twin_cfg = dataclasses.replace(
+                self.config, strategy="ell", frontier_cap=cap
+            )
+            # pinned pad width: cost churn must not move the twin's
+            # compiled shapes (see _rebuild_backend)
+            self._repair_twin = EllBackend.build(
+                self.graph, twin_cfg, max_deg=self._adjacency_width()
+            )
+            self._repair_twin_key = key
+        return self._repair_twin
+
+    def resolve(self, warm: bool = True) -> SingleSourceResult:
+        """Re-solve the plan's resident single-source problem against
+        the current (updated) weights. ``warm=True`` repairs from the
+        resident answer: changed edges seed a repair frontier (decreases
+        enter their new bucket directly; increases reset and re-seed the
+        predecessor-tree cone) and the generalized bucket loop re-settles
+        only what the perturbation can reach — bitwise identical to the
+        cold solve, per the repro.dynamic contract. Updates outside the
+        warm contract (see ``dynamic.plan_repair``) re-solve cold;
+        telemetry reports which path ran (``warm``/``repaired``/``cone``).
+        """
+        if self._demoted is not None:
+            return _mark_fallback(self._demoted.resolve(warm=warm))
+        r = self._resident
+        if r is None:
+            raise ValueError(
+                "resolve() repairs the plan's resident state — solve a "
+                "SingleSource query first to establish it"
+            )
+        src = jnp.asarray(r.source, jnp.int32)
+        rep = reason = None
+        if warm:
+            rep, reason = plan_repair(
+                self.graph, r, pred_mode=self.config.pred_mode
+            )
+        if rep is not None and rep.repaired == 0:
+            # distance-neutral churn: distances stand as-is. argmin
+            # preds are a function of (distances, *current* weights),
+            # and a tie can move without any distance moving (a decrease
+            # landing exactly on dist[v] creates a new smaller-id tight
+            # parent) — recompute the tree against the updated graph;
+            # packed ties are covered by the repair's word-order seeds,
+            # and 'none' tracks no tree
+            dist = jnp.asarray(r.dist, jnp.int32)
+            if self.config.pred_mode == "argmin":
+                g = self.graph
+                pred = pred_argmin(
+                    dist, g.src, g.dst, g.w, src, n=g.n_nodes
+                )
+            else:
+                pred = jnp.asarray(r.pred, jnp.int32)
+            self._remember(r.source, dist, pred, r.overflow)
+            zero = jnp.zeros((), jnp.int32)
+            return SingleSourceResult(
+                dist,
+                pred,
+                Telemetry(
+                    zero, zero, jnp.zeros((), bool), warm=True, repaired=0, cone=0
+                ),
+            )
+        if rep is not None:
+            tent0 = jnp.asarray(rep.tent0)
+            explored0 = jnp.asarray(rep.explored0)
+            backend = self._warm_backend(rep.repaired)
+            tent, outer, inner, over = self._run_warm(backend, tent0, explored0)
+            if backend is not self.backend and bool(np.any(np.asarray(over))):
+                # repair cascade outgrew the capped twin: re-run the
+                # same warm state full-width (answers never depend on
+                # the cap — it only moves time), and escalate the cap
+                # floor so this workload's later repairs fit first try
+                self._twin_cap_floor = min(backend.cap * 4, self.graph.n_nodes)
+                tent, outer, inner, over = self._run_warm(
+                    self.backend, tent0, explored0
+                )
+            tel = Telemetry(
+                outer, inner, over, warm=True, repaired=rep.repaired, cone=rep.cone
+            )
+        else:
+            tent, outer, inner, over = self._run1(self.backend, src)
+            tel = Telemetry(outer, inner, over, warm=False)
+        dist, pred = _finish_pred(tent, self.graph, src, self.config)
+        self._remember(r.source, dist, pred, over)
+        return SingleSourceResult(dist, pred, tel)
+
+    def _remember(self, source, dist, pred, over) -> None:
+        self._resident = Resident(
+            source=int(source),
+            dist=np.asarray(dist, np.int64),
+            pred=np.asarray(pred, np.int32),
+            w=np.array(np.asarray(self.graph.w), np.int32),
+            overflow=bool(np.any(np.asarray(over))),
+        )
 
     def explain(self) -> dict:
         """Plan provenance for logs/telemetry: the resolved operating
@@ -156,6 +389,9 @@ class Plan:
             "n_shards": cfg.n_shards,
             "tuning_source": None if self.record is None else self.record.source,
             "fallback_taken": self._demoted is not None,
+            "resident_source": (
+                None if self._resident is None else self._resident.source
+            ),
         }
 
     # -- query dispatch ------------------------------------------------------
@@ -179,6 +415,7 @@ class Plan:
         )
         tent, outer, inner, over = self._run1(self.backend, src)
         dist, pred = _finish_pred(tent, self.graph, src, self.config)
+        self._remember(q.source, dist, pred, over)  # dynamic residency
         return SingleSourceResult(dist, pred, Telemetry(outer, inner, over))
 
     def _multi(self, q: MultiSource) -> MultiSourceResult:
@@ -260,7 +497,20 @@ class Engine:
     mints ``Plan``s. ``config`` is a concrete ``DeltaConfig`` or
     ``"auto"``; with ``tune=True`` (measured search) or ``tune_cache``
     (persistent record store) a concrete config survives as the tuning
-    *base* — its non-searched fields carry into the resolved plan."""
+    *base* — its non-searched fields carry into the resolved plan.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.api import Engine, PointToPoint
+    >>> from repro.core import DeltaConfig
+    >>> from repro.graphs.structures import COOGraph
+    >>> g = COOGraph(jnp.array([0, 1, 0], jnp.int32),
+    ...              jnp.array([1, 2, 2], jnp.int32),
+    ...              jnp.array([1, 1, 5], jnp.int32), 3)
+    >>> plan = Engine(g, DeltaConfig(delta=2, pred_mode="argmin")).plan()
+    >>> res = plan.solve(PointToPoint(0, 2))
+    >>> (res.distance, res.path)
+    (2, [0, 1, 2])
+    """
 
     def __init__(
         self,

@@ -20,7 +20,17 @@ def extract_path(
     pred: np.ndarray, source: int, target: int, n_nodes: int
 ) -> Optional[List[int]]:
     """Source->target vertex list from a predecessor array, or ``None``
-    when the chain does not reach the source."""
+    when the chain does not reach the source.
+
+    >>> import numpy as np
+    >>> pred = np.array([-1, 0, 1, -1], np.int32)   # tree 0 -> 1 -> 2
+    >>> extract_path(pred, 0, 2, 4)
+    [0, 1, 2]
+    >>> extract_path(pred, 0, 0, 4)                 # source == target
+    [0]
+    >>> extract_path(pred, 0, 3, 4) is None         # unreachable target
+    True
+    """
     source, target = int(source), int(target)
     path = [target]
     for _ in range(n_nodes):

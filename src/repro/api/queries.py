@@ -18,11 +18,16 @@ which early-exit rule applies (DESIGN.md §10):
 * ``ManyToMany``    — an |S| x |T| distance matrix assembled from tiled
   multi-source solves (betweenness/matrix workloads); every tile runs
   the same compiled multi-source program.
+* ``UpdateBatch``   — a dynamic-graph edge-cost update plus re-solve of
+  the plan's resident single-source problem (DESIGN.md §11); with
+  ``warm=True`` the re-solve repairs from the previous answer instead
+  of starting cold, bitwise identically.
 
 Every result carries a ``Telemetry`` record of what the solve actually
 did — buckets processed, light-phase inner iterations, the compacted-
-frontier overflow flag, and whether the plan's overflow fallback
-re-solved the query full-width.
+frontier overflow flag, whether the plan's overflow fallback re-solved
+the query full-width, and (for dynamic re-solves) how many vertices the
+warm repair actually touched.
 """
 
 from __future__ import annotations
@@ -33,7 +38,14 @@ from typing import Any, List, Optional, Sequence, Union
 
 @dataclasses.dataclass(frozen=True)
 class SingleSource:
-    """Full SSSP from one source: distance vector + predecessor tree."""
+    """Full SSSP from one source: distance vector + predecessor tree.
+
+    Solving it also establishes the plan's *resident* state — the
+    starting point ``Plan.update`` / ``Plan.resolve`` repair from.
+
+    >>> SingleSource(7)
+    SingleSource(source=7)
+    """
 
     source: int
 
@@ -41,7 +53,11 @@ class SingleSource:
 @dataclasses.dataclass(frozen=True)
 class MultiSource:
     """Batched SSSP from several sources (one vmapped program; each
-    lane is bitwise identical to the corresponding ``SingleSource``)."""
+    lane is bitwise identical to the corresponding ``SingleSource``).
+
+    >>> MultiSource([0, 3, 5]).sources
+    [0, 3, 5]
+    """
 
     sources: Sequence[int]
 
@@ -49,7 +65,12 @@ class MultiSource:
 @dataclasses.dataclass(frozen=True)
 class PointToPoint:
     """One source -> target distance (and path, when the plan tracks
-    predecessors), with early exit once the target's bucket settles."""
+    predecessors), with early exit once the target's bucket settles.
+
+    >>> q = PointToPoint(source=0, target=42)
+    >>> (q.source, q.target)
+    (0, 42)
+    """
 
     source: int
     target: int
@@ -58,7 +79,11 @@ class PointToPoint:
 @dataclasses.dataclass(frozen=True)
 class BoundedRadius:
     """Distances of every vertex within ``radius`` of the source;
-    vertices farther than ``radius`` report as unreachable."""
+    vertices farther than ``radius`` report as unreachable.
+
+    >>> BoundedRadius(0, 150).radius
+    150
+    """
 
     source: int
     radius: int
@@ -67,14 +92,42 @@ class BoundedRadius:
 @dataclasses.dataclass(frozen=True)
 class ManyToMany:
     """|S| x |T| distance matrix, assembled from multi-source solves
-    tiled ``tile`` sources at a time (default: min(|S|, 8))."""
+    tiled ``tile`` sources at a time (default: min(|S|, 8)).
+
+    >>> ManyToMany(sources=[0, 1], targets=[5, 6, 7]).tile is None
+    True
+    """
 
     sources: Sequence[int]
     targets: Sequence[int]
     tile: Optional[int] = None
 
 
-Query = Union[SingleSource, MultiSource, PointToPoint, BoundedRadius, ManyToMany]
+@dataclasses.dataclass(frozen=True)
+class UpdateBatch:
+    """Edge-cost update batch + re-solve of the resident single-source
+    problem: ``plan.solve(UpdateBatch(ids, weights))`` is exactly
+    ``plan.update(ids, weights)`` followed by ``plan.resolve(warm=...)``
+    and returns the refreshed ``SingleSourceResult``. ``edge_ids`` index
+    the graph's COO edge arrays; topology never changes, only costs.
+
+    >>> UpdateBatch(edge_ids=[3, 9], new_weights=[12, 1])
+    UpdateBatch(edge_ids=[3, 9], new_weights=[12, 1], warm=True)
+    """
+
+    edge_ids: Sequence[int]
+    new_weights: Sequence[int]
+    warm: bool = True
+
+
+Query = Union[
+    SingleSource,
+    MultiSource,
+    PointToPoint,
+    BoundedRadius,
+    ManyToMany,
+    UpdateBatch,
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,12 +135,27 @@ class Telemetry:
     """What one solve actually did. ``buckets`` / ``inner_iters`` /
     ``overflow`` are the driver's raw counters (jax scalars, or arrays
     with a leading batch axis for ``MultiSource``); ``fallback`` is True
-    when the plan's overflow fallback answered the query full-width."""
+    when the plan's overflow fallback answered the query full-width.
+
+    The dynamic-update fields describe a ``Plan.resolve`` /
+    ``UpdateBatch`` re-solve: ``warm`` is True when the answer came from
+    the warm-start repair path (False: cold re-solve, e.g. an update
+    outside the warm contract); ``repaired`` counts the vertices the
+    repair re-seeded or reset, of which ``cone`` were reset by the
+    increase cone — both ``None`` on ordinary queries.
+
+    >>> t = Telemetry(buckets=4, inner_iters=9, overflow=False)
+    >>> (t.fallback, t.warm, t.repaired, t.cone)
+    (False, False, None, None)
+    """
 
     buckets: Any
     inner_iters: Any
     overflow: Any
     fallback: bool = False
+    warm: bool = False
+    repaired: Optional[int] = None
+    cone: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,4 +234,5 @@ __all__ = [
     "SingleSource",
     "SingleSourceResult",
     "Telemetry",
+    "UpdateBatch",
 ]

@@ -46,6 +46,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec
 
@@ -92,18 +93,46 @@ def candidate_words(cand_d, src_ids, ok, packed: bool):
     return jnp.where(ok, cand_d, INF32)
 
 
+def graph_is_canonical(graph: COOGraph) -> bool:
+    """True when every edge weight is >= 1 — the *canonical-ties* graph
+    class (DESIGN.md §11). On it, packed (cost, pred) relaxations use
+    the word-order C4 filter, whose fixed point is a pure function of
+    (graph, source): word[v] = (dist[v], smallest-id tight parent). That
+    trajectory independence is what lets a warm-started repair solve
+    (repro.dynamic) be bitwise identical to a cold solve. Zero-weight
+    graphs keep the historical strict-distance filter instead: the
+    canonical rule could close a predecessor cycle inside a zero-weight
+    tie group (exactly the hazard documented for pred_mode='argmin'),
+    while the temporal first-settled tie-break cannot."""
+    w = np.asarray(graph.w)
+    return bool(w.size == 0 or int(w.min()) >= 1)
+
+
 # ---------------------------------------------------------------------------
 # shared primitive ops (also consumed by core.distributed)
 # ---------------------------------------------------------------------------
 
 def scan_bucket(dist, explored, bucket_i, *, delta: int):
     """Fused dense-bucket scan (paper C1): the frontier mask of bucket
-    ``bucket_i``, its any-reduce, and the next non-empty bucket index —
-    pure-jnp twin of the ``kernels/bucket_scan`` Pallas kernel."""
+    ``bucket_i``, its any-reduce, and the next bucket index holding
+    *unexplored* work — pure-jnp twin of the ``kernels/bucket_scan``
+    Pallas kernel.
+
+    The next-bucket minimum is restricted to unsettled vertices
+    (``dist < explored``). On a cold solve this changes nothing, bit
+    for bit: while the outer loop sits at bucket i, every finite vertex
+    in a bucket > i is still unexplored (``explored`` is only ever set
+    to a vertex's tent value while it sits in the *current* bucket's
+    frontier, and tent never increases — so a future-bucket tent value
+    is always strictly below its explored mark; proof in DESIGN.md
+    §11). On a *warm* re-solve (repro.dynamic) the restriction is
+    load-bearing: buckets whose vertices are all pre-settled from the
+    previous solve are skipped outright, which bounds the outer loop to
+    the buckets the repair actually touched."""
     fin = dist < INF32
     b = jnp.where(fin, dist // delta, _IMAX)
     frontier = fin & (b == bucket_i) & (dist < explored)
-    nxt = jnp.where(b > bucket_i, b, _IMAX).min()
+    nxt = jnp.where((b > bucket_i) & (dist < explored), b, _IMAX).min()
     return frontier, frontier.any(), nxt
 
 
@@ -117,8 +146,8 @@ def edge_candidates(d_src, f_src, w, *, delta: int, light: bool):
     return cand, active & phase
 
 
-def edge_relax_words(d, frontier, src, dst, w, *, delta: int, light: bool,
-                     packed: bool):
+def edge_relax_words(tent, frontier, src, dst, w, *, delta: int, light: bool,
+                     packed: bool, canonical: bool = False):
     """Candidate words of one edge-array relaxation: frontier/phase mask,
     C4 early filter against the destination gather, word packing. The
     single shared generation path of the single-device ``edge_sweep``
@@ -127,48 +156,74 @@ def edge_relax_words(d, frontier, src, dst, w, *, delta: int, light: bool,
     what keeps them bitwise interchangeable (DESIGN.md §9). Padding
     edges may carry src == n (sentinel): out-of-range gathers are filled
     inactive — the TPU version of the paper's 'benign garbage writes'
-    argument."""
+    argument.
+
+    The C4 filter has two regimes (DESIGN.md §11): with
+    ``canonical=True`` (packed mode on a w >= 1 graph) a candidate word
+    passes when it beats the destination's current *word* — so an
+    equal-cost candidate with a smaller predecessor id still lands, and
+    the converged word is the schedule-independent (dist, smallest-id
+    tight parent). Otherwise the historical strict distance comparison
+    applies (first-settled tie winner keeps its slot)."""
+    d = dist_of(tent, packed)
     f = jnp.take(frontier, src, mode="fill", fill_value=False)
     d_src = jnp.take(d, src, mode="fill", fill_value=INF32)
     cand, ok = edge_candidates(d_src, f, w, delta=delta, light=light)
+    if packed and canonical:
+        word = packing.pack(cand, src)
+        word_dst = jnp.take(tent, dst, mode="fill",
+                            fill_value=packing.INF_PACKED)
+        ok = ok & (word < word_dst)       # C4 on (cost, pred) word order
+        return jnp.where(ok, word, packing.INF_PACKED)
     d_dst = jnp.take(d, dst, mode="fill", fill_value=INF32)
     ok = ok & (cand < d_dst)              # C4: early filter before scatter
     return candidate_words(cand, src, ok, packed)
 
 
 def edge_sweep(tent, frontier, src, dst, w, *, delta: int, light: bool,
-               packed: bool):
+               packed: bool, canonical: bool = False):
     """One relaxation sweep over an edge array; out-of-range scatters
     (padding edges) drop."""
-    words = edge_relax_words(dist_of(tent, packed), frontier, src, dst, w,
-                             delta=delta, light=light, packed=packed)
+    words = edge_relax_words(tent, frontier, src, dst, w,
+                             delta=delta, light=light, packed=packed,
+                             canonical=canonical)
     return tent.at[dst].min(words, mode="drop")
 
 
-def ell_relax_words(d, fidx, rows_n, rows_w, *, n: int, packed: bool):
+def ell_relax_words(tent, fidx, rows_n, rows_w, *, n: int, packed: bool,
+                    canonical: bool = False):
     """Candidate words of gathered ELL rows (``rows_n``/``rows_w``
     (cap, D), global neighbor ids). ``fidx`` int32[cap] holds the
     *global* vertex ids of the compacted rows with a >= n sentinel for
     padding slots (gathers INF). Shared by the single-device
     ``ell_sweep`` and the per-shard ``ShardedEllBackend`` sweep — same
-    bitwise-interchangeability contract as ``edge_relax_words``."""
+    bitwise-interchangeability contract (and the same two C4 filter
+    regimes) as ``edge_relax_words``."""
+    d = dist_of(tent, packed)
     d_f = jnp.take(d, fidx, mode="fill", fill_value=INF32)
     valid = (rows_n < n) & (rows_w < INF32) & (d_f[:, None] < INF32)
     cand = (jnp.where(valid, d_f[:, None], 0)
             + jnp.where(valid, rows_w, 0))
+    src_ids = jnp.broadcast_to(fidx[:, None], rows_n.shape)
+    if packed and canonical:
+        word = packing.pack(cand, src_ids)
+        word_dst = jnp.take(tent, rows_n, mode="fill",
+                            fill_value=packing.INF_PACKED)
+        ok = valid & (word < word_dst)
+        return jnp.where(ok, word, packing.INF_PACKED)
     d_dst = jnp.take(d, rows_n, mode="fill", fill_value=INF32)
     ok = valid & (cand < d_dst)
-    src_ids = jnp.broadcast_to(fidx[:, None], rows_n.shape)
     return candidate_words(cand, src_ids, ok, packed)
 
 
-def ell_sweep(tent, fidx, nbr, w_ell, *, n: int, packed: bool):
+def ell_sweep(tent, fidx, nbr, w_ell, *, n: int, packed: bool,
+              canonical: bool = False):
     """Expand compacted frontier rows of an ELL adjacency block.
     ``fidx`` int32[cap] with sentinel value n for padding slots."""
-    d = dist_of(tent, packed)
     rows_n = nbr[fidx]                      # (cap, D); row n is all-sentinel
     rows_w = w_ell[fidx]
-    words = ell_relax_words(d, fidx, rows_n, rows_w, n=n, packed=packed)
+    words = ell_relax_words(tent, fidx, rows_n, rows_w, n=n, packed=packed,
+                            canonical=canonical)
     return tent.at[rows_n.ravel()].min(words.ravel(), mode="drop")
 
 
@@ -214,12 +269,16 @@ class _PallasScanMixin:
                            backend="pallas", interpret=self.interpret)
 
 
-def _ell_blocks(graph: COOGraph, delta: int):
+def _ell_blocks(graph: COOGraph, delta: int, max_deg=None):
     """Host-side preprocessing shared by the ELL strategies: CSR convert,
-    light/heavy split (paper Alg. 1 lines 3–5), ELL pad."""
+    light/heavy split (paper Alg. 1 lines 3–5), ELL pad. ``max_deg``
+    pins both blocks' pad width; the default (tightest per-block width)
+    is weight-*dependent* — dynamic-update consumers pin the weight-
+    independent full adjacency degree instead, so rebuilding after a
+    cost change keeps the compiled shapes (repro.dynamic)."""
     csr = coo_to_csr(graph)
     light, heavy = light_heavy_split(csr, delta)
-    return csr_to_ell(light), csr_to_ell(heavy)
+    return csr_to_ell(light, max_deg), csr_to_ell(heavy, max_deg)
 
 
 @jax.tree_util.register_dataclass
@@ -232,14 +291,17 @@ class EdgeBackend(RelaxBackend):
     dst: jax.Array
     w: jax.Array
     delta: int = _static()
+    canonical: bool = _static()
 
     @classmethod
     def build(cls, graph: COOGraph, cfg) -> "EdgeBackend":
-        return cls(graph.src, graph.dst, graph.w, cfg.delta)
+        return cls(graph.src, graph.dst, graph.w, cfg.delta,
+                   graph_is_canonical(graph))
 
     def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
         tent = edge_sweep(tent, mask, self.src, self.dst, self.w,
-                          delta=self.delta, light=light, packed=packed)
+                          delta=self.delta, light=light, packed=packed,
+                          canonical=self.canonical)
         return tent, jnp.zeros((), bool)
 
 
@@ -255,17 +317,20 @@ class EllBackend(_FrontierCompactMixin, RelaxBackend):
     delta: int = _static()
     n: int = _static()
     cap: int = _static()
+    canonical: bool = _static()
 
     @classmethod
-    def build(cls, graph: COOGraph, cfg) -> "EllBackend":
-        light, heavy = _ell_blocks(graph, cfg.delta)
+    def build(cls, graph: COOGraph, cfg, max_deg=None) -> "EllBackend":
+        light, heavy = _ell_blocks(graph, cfg.delta, max_deg)
         return cls(light, heavy, cfg.delta, graph.n_nodes,
-                   cfg.frontier_cap or graph.n_nodes)
+                   cfg.frontier_cap or graph.n_nodes,
+                   graph_is_canonical(graph))
 
     def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
         fidx, over = self.compact(mask)
         ell = self.light if light else self.heavy
-        tent = ell_sweep(tent, fidx, ell.nbr, ell.w, n=self.n, packed=packed)
+        tent = ell_sweep(tent, fidx, ell.nbr, ell.w, n=self.n, packed=packed,
+                         canonical=self.canonical)
         return tent, over
 
 
@@ -287,12 +352,14 @@ class PallasEllBackend(_FrontierCompactMixin, _PallasScanMixin,
     n: int = _static()
     cap: int = _static()
     interpret: bool = _static()
+    canonical: bool = _static()
 
     @classmethod
-    def build(cls, graph: COOGraph, cfg) -> "PallasEllBackend":
-        light, heavy = _ell_blocks(graph, cfg.delta)
+    def build(cls, graph: COOGraph, cfg, max_deg=None) -> "PallasEllBackend":
+        light, heavy = _ell_blocks(graph, cfg.delta, max_deg)
         return cls(light, heavy, cfg.delta, graph.n_nodes,
-                   cfg.frontier_cap or graph.n_nodes, cfg.interpret)
+                   cfg.frontier_cap or graph.n_nodes, cfg.interpret,
+                   graph_is_canonical(graph))
 
     def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
         fidx, over = self.compact(mask)
@@ -301,10 +368,19 @@ class PallasEllBackend(_FrontierCompactMixin, _PallasScanMixin,
         cand = ell_relax(fidx, d, ell.w, backend="pallas",
                          interpret=self.interpret)          # (cap, D)
         rows_n = ell.nbr[fidx]
-        d_dst = jnp.take(d, rows_n, mode="fill", fill_value=INF32)
-        ok = cand < d_dst                 # C4 filter on kernel candidates
         src_ids = jnp.broadcast_to(fidx[:, None], rows_n.shape)
-        words = candidate_words(cand, src_ids, ok, packed)
+        if packed and self.canonical:
+            # C4 on word order (the kernel only ever sees distances, so
+            # INF candidates from padded slots are masked explicitly)
+            word = packing.pack(cand, src_ids)
+            word_dst = jnp.take(tent, rows_n, mode="fill",
+                                fill_value=packing.INF_PACKED)
+            ok = (cand < INF32) & (word < word_dst)
+            words = jnp.where(ok, word, packing.INF_PACKED)
+        else:
+            d_dst = jnp.take(d, rows_n, mode="fill", fill_value=INF32)
+            ok = cand < d_dst             # C4 filter on kernel candidates
+            words = candidate_words(cand, src_ids, ok, packed)
         tent = tent.at[rows_n.ravel()].min(words.ravel(), mode="drop")
         return tent, over
 
@@ -410,22 +486,23 @@ class ShardedEdgeBackend(_ShardedMixin, RelaxBackend):
     delta: int = _static()
     n: int = _static()
     n_shards: int = _static()
+    canonical: bool = _static()
 
     @classmethod
     def build(cls, graph: COOGraph, cfg) -> "ShardedEdgeBackend":
         shards = resolve_n_shards(cfg.n_shards)
         part = partition_edges(graph, shards)
         return cls(part.src, part.dst, part.w, cfg.delta, graph.n_nodes,
-                   shards)
+                   shards, graph_is_canonical(graph))
 
     def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
-        delta, n = self.delta, self.n
+        delta, n, canonical = self.delta, self.n, self.canonical
 
         def body(tent_r, mask_r, src, dst, w):
             src, dst, w = src[0], dst[0], w[0]    # shed the shard dim
-            words = edge_relax_words(dist_of(tent_r, packed), mask_r,
+            words = edge_relax_words(tent_r, mask_r,
                                      src, dst, w, delta=delta, light=light,
-                                     packed=packed)
+                                     packed=packed, canonical=canonical)
             buf = jnp.full((n,), _inf_word(packed)).at[dst].min(
                 words, mode="drop")
             return jnp.minimum(tent_r, lax.pmin(buf, _SHARD_AXIS))
@@ -451,19 +528,22 @@ class ShardedEllBackend(_ShardedMixin, RelaxBackend):
     n: int = _static()
     n_shards: int = _static()
     cap: int = _static()
+    canonical: bool = _static()
 
     @classmethod
     def build(cls, graph: COOGraph, cfg) -> "ShardedEllBackend":
         shards = resolve_n_shards(cfg.n_shards)
         part = partition_ell(graph, shards, cfg.delta)
         cap = min(cfg.frontier_cap or part.shard_nodes, part.shard_nodes)
-        return cls(part, cfg.delta, graph.n_nodes, shards, cap)
+        return cls(part, cfg.delta, graph.n_nodes, shards, cap,
+                   graph_is_canonical(graph))
 
     def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
         part = self.part
         nbr = part.light_nbr if light else part.heavy_nbr
         w_ell = part.light_w if light else part.heavy_w
         n, s_nodes, cap = self.n, part.shard_nodes, self.cap
+        canonical = self.canonical
         n_pad = self.n_shards * s_nodes
 
         def body(tent_r, mask_r, nbr_s, w_s):
@@ -478,8 +558,9 @@ class ShardedEllBackend(_ShardedMixin, RelaxBackend):
             gidx = jnp.where(lidx < s_nodes, lidx + base, n).astype(jnp.int32)
             rows_n = nbr_s[lidx]                  # (cap, D), global ids
             rows_w = w_s[lidx]
-            words = ell_relax_words(dist_of(tent_r, packed), gidx,
-                                    rows_n, rows_w, n=n, packed=packed)
+            words = ell_relax_words(tent_r, gidx,
+                                    rows_n, rows_w, n=n, packed=packed,
+                                    canonical=canonical)
             buf = jnp.full((n,), _inf_word(packed)).at[rows_n.ravel()].min(
                 words.ravel(), mode="drop")
             tent_out = jnp.minimum(tent_r, lax.pmin(buf, _SHARD_AXIS))

@@ -39,6 +39,7 @@ assumes weights >= 1 (zero-weight ties could close a predecessor cycle;
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
@@ -168,6 +169,23 @@ def _run_one_p2p(backend: RelaxBackend, source, target, *, n: int,
 
 
 @partial(jax.jit, static_argnames=("n", "packed"))
+def _run_one_warm(backend: RelaxBackend, tent0, explored0, *, n: int,
+                  packed: bool):
+    """Jitted warm-start driver (repro.dynamic, DESIGN.md §11): the same
+    outer/inner bucket loop, entered with a *repaired* state instead of
+    the all-INF cold one. ``tent0`` are upper-bound tent words (dist, or
+    packed (dist, pred)); ``explored0`` marks the tent value each vertex
+    last relaxed its edges at (its old settled distance), so exactly the
+    vertices whose tent was improved or reset by the repair satisfy
+    ``tent < explored`` and re-enter their buckets — Δ-stepping's own
+    frontier rule bounds the re-relaxation to the repair cone, and the
+    unsettled-only next-bucket scan skips every bucket the repair never
+    touched."""
+    return _run_backend(backend, None, n=n, packed=packed,
+                        init=(tent0, explored0))
+
+
+@partial(jax.jit, static_argnames=("n", "packed"))
 def _run_one_bounded(backend: RelaxBackend, source, radius, *, n: int,
                      packed: bool):
     """Jitted bounded-radius driver: stop at the first bucket past
@@ -183,15 +201,20 @@ def _run_one_bounded(backend: RelaxBackend, source, radius, *, n: int,
 
 
 def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool,
-                 stop=None):
+                 stop=None, init=None):
     """Outer/inner Δ-stepping loop (paper Alg. 1) over one backend.
     Returns ``(tent, outer_iters, inner_iters, overflow)``. ``stop``
     (trace-time constant) is an optional early-exit predicate
     ``(tent, next_bucket) -> bool`` checked between buckets — the hook
     the point-to-point and bounded-radius drivers hang off; ``None``
-    keeps the full-solve loop bit-for-bit unchanged."""
-    tent0 = _init_tent(n, source, packed)
-    explored0 = jnp.full((n,), INF32, jnp.int32)
+    keeps the full-solve loop bit-for-bit unchanged. ``init`` is an
+    optional warm ``(tent0, explored0)`` state (the repro.dynamic repair
+    path, DESIGN.md §11); ``None`` is the cold all-INF start."""
+    if init is None:
+        tent0 = _init_tent(n, source, packed)
+        explored0 = jnp.full((n,), INF32, jnp.int32)
+    else:
+        tent0, explored0 = init
 
     def scan(tent, explored, i):
         return backend.scan(_dist_of(tent, packed), explored, i)
@@ -314,6 +337,10 @@ class DeltaSteppingSolver:
 
     def __init__(self, graph: COOGraph, config: DeltaConfig = DeltaConfig(),
                  *, free_mask=None, tune_cache: Optional[str] = None):
+        warnings.warn(
+            "DeltaSteppingSolver is deprecated: use repro.api.Engine("
+            "graph, config).plan() and the query algebra (DESIGN.md §10)",
+            DeprecationWarning, stacklevel=2)
         from repro.api import Engine  # lazy: api builds on this module
         # legacy semantics, preserved exactly: tune_cache is consulted
         # for config="auto" only — a concrete config a caller pinned is
@@ -356,4 +383,11 @@ def delta_stepping(graph: COOGraph, source: int,
     """**Deprecated** one-shot convenience wrapper (prefer
     ``repro.api.Engine(graph, config).plan().solve(SingleSource(s))``).
     ``config="auto"`` picks Δ from graph statistics (DESIGN.md §7)."""
-    return DeltaSteppingSolver(graph, config).solve(source)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        solver = DeltaSteppingSolver(graph, config)
+    warnings.warn(
+        "delta_stepping is deprecated: use repro.api.Engine(graph, config)"
+        ".plan().solve(SingleSource(source)) (DESIGN.md §10)",
+        DeprecationWarning, stacklevel=2)
+    return solver.solve(source)

@@ -1,0 +1,39 @@
+"""Dynamic-graph update subsystem: warm-start re-solves after edge-cost
+changes (DESIGN.md §11).
+
+The paper's workloads — game maps, small-world traffic graphs — change
+edge costs constantly in production, yet a classic SSSP engine pays a
+full cold solve per change. This package makes an update a first-class
+engine operation behind the Query/Plan façade:
+
+    plan = Engine(graph, config).plan()
+    plan.solve(SingleSource(0))            # establishes residency
+    plan.update(edge_ids, new_weights)     # swap weights, keep topology
+    res = plan.resolve(warm=True)          # bounded repair, not a re-solve
+
+``update.apply_weight_update`` is the pure graph transform;
+``repair.plan_repair`` diffs the plan's weights against the resident
+snapshot and builds the warm ``(tent0, explored0)`` entry state for the
+generalized bucket loop — decreases enter their new bucket directly,
+increases reset and re-seed the predecessor-tree cone. Warm results are
+bitwise identical to a cold solve of the updated graph (dist and pred,
+packed words included on the canonical-ties weight class); updates
+outside the warm contract fall back to a cold re-solve with the reason
+recorded.
+"""
+
+from repro.dynamic.repair import (
+    RepairPlan,
+    Resident,
+    plan_repair,
+    resident_words,
+)
+from repro.dynamic.update import apply_weight_update
+
+__all__ = [
+    "RepairPlan",
+    "Resident",
+    "apply_weight_update",
+    "plan_repair",
+    "resident_words",
+]

@@ -1,0 +1,209 @@
+"""Warm-start repair planning (DESIGN.md §11).
+
+After a plan has solved ``SingleSource(s)`` once, a weight perturbation
+does not invalidate the whole tentative-distance array — it invalidates
+a bounded region, and the bucket structure is exactly the machinery
+that re-settles that region cheaply (Dong et al. 2021's stepping
+framework; the ALT-style reuse bound of radius stepping). This module
+computes, on the host, the warm ``(tent0, explored0)`` state the
+generalized bucket loop (``core.delta_stepping._run_one_warm``) is
+entered with:
+
+* **decreases** seed their endpoint's tent directly with the improved
+  candidate word — the vertex lands in its *new* bucket, satisfies the
+  frontier rule ``tent < explored`` and re-relaxes from there; the
+  cascade of further improvements is Δ-stepping's own frontier
+  propagation, so the repair is bounded by construction.
+* **increases** cannot be expressed as a scatter-min (tent words never
+  grow), so every vertex whose shortest path might have used a worsened
+  edge — the predecessor-tree descendants of each *suspect root* (a
+  tree child across an increased edge) — is reset to INF and re-seeded
+  from the cone boundary: one min-scatter over all edges entering the
+  cone from settled outside vertices, with *updated* weights.
+
+Bitwise contract: the repaired warm solve converges to exactly the
+state a cold solve of the updated graph converges to — dist always
+(the min-plus fixed point is schedule-free), and packed (cost, pred)
+words on the canonical-ties graph class (all weights >= 1), where the
+word-order C4 filter makes the packed fixed point schedule-free too
+(``core.backends.graph_is_canonical``). ``plan_repair`` refuses (with a
+reason, so the caller re-solves cold) the cases outside the contract:
+packed mode on zero-weight graphs, increases without a predecessor
+tree, or a resident solve that tripped the overflow flag.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core import pack as packing
+from repro.graphs.structures import COOGraph, INF32
+
+_INF = int(INF32)
+_MASK32 = packing.MASK32
+_INF_PACKED = packing.INF_PACKED
+
+
+@dataclasses.dataclass(frozen=True)
+class Resident:
+    """The state a ``Plan`` keeps resident after a ``SingleSource``
+    solve: converged distances and predecessors, the weight snapshot
+    they were solved against (updates are diffed against it, so update
+    batches compose), and the overflow flag (an overflowed resident
+    state is not trustworthy warm-start material)."""
+
+    source: int
+    dist: np.ndarray        # int64[n], INF32 sentinel
+    pred: np.ndarray        # int32[n], -1 sentinel
+    w: np.ndarray           # int32[E] weight snapshot at solve time
+    overflow: bool
+
+
+@dataclasses.dataclass(frozen=True)
+class RepairPlan:
+    """Warm entry state for the bucket loop plus its telemetry counts.
+    ``repaired == 0`` means the update batch was distance-neutral (no
+    effective weight change) and the resident answer stands as-is."""
+
+    tent0: Optional[np.ndarray]      # int32[n] dist or int64[n] packed words
+    explored0: Optional[np.ndarray]  # int32[n]
+    cone: int                        # vertices reset by the increase cone
+    repaired: int                    # cone + directly re-seeded vertices
+
+
+def resident_words(dist, pred, source: int, packed: bool) -> np.ndarray:
+    """Reconstruct the converged tent-word array from (dist, pred) —
+    bit-for-bit what the solver's final state held: ``pack(dist, pred)``
+    for reachable vertices, ``pack(0, source)`` at the source (the cold
+    init word, which ``_finish_pred``'s -1 masking hides), INF words for
+    unreachable vertices (nothing ever scatters into them)."""
+    dist = np.asarray(dist, np.int64)
+    if not packed:
+        return np.where(dist < _INF, dist, _INF).astype(np.int32)
+    pred = np.asarray(pred, np.int64)
+    words = np.where(
+        dist < _INF,
+        (dist << 32) | (pred & _MASK32),
+        np.int64(_INF_PACKED),
+    ).astype(np.int64)
+    words[source] = np.int64(source)          # pack(0, source)
+    return words
+
+
+def _grow_descendants(in_cone: np.ndarray, pred: np.ndarray, n: int) -> None:
+    """Mark every pred-tree descendant of the vertices already set in
+    ``in_cone`` (in place). Level-order BFS over a sorted child list:
+    O(n log n) to build the list once plus O(level size) per level — not
+    the O(n · depth) a whole-array propagation would cost on the
+    long-diameter lattice/game-map graphs this subsystem targets. Safe
+    on a cyclic pred array (the argmin zero-weight hazard): already-
+    marked vertices are never re-expanded."""
+    kids = np.nonzero(pred >= 0)[0]
+    if kids.size == 0:
+        return
+    order = np.argsort(pred[kids], kind="stable")
+    kids_s = kids[order]
+    par_s = pred[kids][order]
+    begins = np.searchsorted(par_s, np.arange(n))
+    ends = np.searchsorted(par_s, np.arange(n) + 1)
+    frontier = np.nonzero(in_cone)[0]
+    while frontier.size:
+        b0, cnt = begins[frontier], ends[frontier] - begins[frontier]
+        total = int(cnt.sum())
+        if total == 0:
+            break
+        # vectorized multi-range gather of every frontier vertex's kids
+        csum = np.cumsum(cnt)
+        idx = np.arange(total) + np.repeat(b0 - (csum - cnt), cnt)
+        children = kids_s[idx]
+        frontier = children[~in_cone[children]]
+        in_cone[frontier] = True
+
+
+def plan_repair(
+    graph: COOGraph, resident: Resident, *, pred_mode: str
+) -> Tuple[Optional[RepairPlan], Optional[str]]:
+    """Diff the graph's current weights against the resident snapshot
+    and compute the warm entry state. Returns ``(plan, reason)``:
+    ``reason`` is a human-readable explanation when the update lies
+    outside the warm contract and the caller must re-solve cold."""
+    packed = pred_mode == "packed"
+    n = graph.n_nodes
+    src = np.asarray(graph.src, np.int64)
+    dst = np.asarray(graph.dst, np.int64)
+    w_new = np.asarray(graph.w, np.int64)
+    w_old = np.asarray(resident.w, np.int64)
+    dist = np.asarray(resident.dist, np.int64)
+    pred = np.asarray(resident.pred, np.int64)
+    source = int(resident.source)
+
+    if resident.overflow:
+        return None, "resident solve tripped the frontier-cap overflow flag"
+    if packed and (int(w_old.min(initial=1)) < 1 or int(w_new.min(initial=1)) < 1):
+        return None, (
+            "packed (cost, pred) repair needs the canonical-ties graph "
+            "class (all weights >= 1, DESIGN.md §11)"
+        )
+
+    changed = np.nonzero(w_new != w_old)[0]
+    if changed.size == 0:
+        return RepairPlan(None, None, 0, 0), None
+    increased = changed[w_new[changed] > w_old[changed]]
+    decreased = changed[w_new[changed] < w_old[changed]]
+    if increased.size and pred_mode == "none":
+        return None, (
+            "weight increases need the predecessor tree to bound the "
+            "repair cone; pred_mode='none' tracks none"
+        )
+
+    # increase cone: pred-tree descendants of every suspect root (a tree
+    # child across an increased edge). Over-approximate — a suspect whose
+    # duplicate-edge tightness survives just costs re-settling work.
+    in_cone = np.zeros(n, bool)
+    if increased.size:
+        a, b = src[increased], dst[increased]
+        hit = (b != source) & (pred[b] == a)
+        in_cone[b[hit]] = True
+        if in_cone.any():
+            _grow_descendants(in_cone, pred, n)
+    cone = int(in_cone.sum())
+
+    base = resident_words(dist, pred, source, packed)
+    tent0 = base.copy()
+    explored0 = np.where(dist < _INF, dist, _INF).astype(np.int32)
+    if cone:
+        tent0[in_cone] = np.int64(_INF_PACKED) if packed else np.int32(_INF)
+        explored0[in_cone] = np.int32(_INF)
+
+    # seeds: (a) every edge entering the cone from a settled outside
+    # vertex (updated weights — the cone's whole re-entry surface, heavy
+    # edges included, since settled vertices never re-enter the
+    # frontier); (b) every decreased edge whose source is outside the
+    # cone (its old distance is still a valid upper bound there).
+    live = dist[src] < _INF
+    mask = live & ~in_cone[src] & in_cone[dst]
+    if decreased.size:
+        mdec = np.zeros(src.shape[0], bool)
+        mdec[decreased] = True
+        mask |= mdec & live & ~in_cone[src]
+    e = np.nonzero(mask)[0]
+    if e.size:
+        cand = dist[src[e]] + w_new[e]
+        keep = cand < _INF
+        e, cand = e[keep], cand[keep]
+    if e.size:
+        if packed:
+            words = (cand << 32) | (src[e] & _MASK32)
+            np.minimum.at(tent0, dst[e], words)
+        else:
+            np.minimum.at(tent0, dst[e], cand.astype(np.int32))
+    seeded = int(np.count_nonzero((tent0 != base) & ~in_cone))
+    if cone == 0 and seeded == 0:
+        # weight churn with no effect on any settled upper bound
+        return RepairPlan(None, None, 0, 0), None
+    return RepairPlan(tent0, explored0, cone, cone + seeded), None
+
+
+__all__ = ["Resident", "RepairPlan", "plan_repair", "resident_words"]

@@ -1,0 +1,44 @@
+"""Weight-update application for dynamic graphs.
+
+Topology is immutable (the game-map/traffic workload changes edge
+*costs*, not the road network), so an update batch is a pure function
+``COOGraph -> COOGraph`` swapping entries of the weight array. Keeping
+``src``/``dst`` untouched means every backend rebuild reuses identical
+index structure — the edge backend's arrays keep their shapes, so the
+module-level jitted drivers never recompile across updates.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.structures import COOGraph, INF32
+
+
+def apply_weight_update(graph: COOGraph, edge_ids, new_weights) -> COOGraph:
+    """New ``COOGraph`` with ``w[edge_ids] = new_weights`` (host-side).
+
+    Validated hard: out-of-range ids or negative/INF weights would
+    otherwise corrupt the engine's non-negative int32 invariant inside a
+    jitted scatter where nothing can raise. Duplicate ids within one
+    batch resolve last-wins (numpy fancy-assignment order), matching the
+    'stream of cost observations' reading of an update feed.
+    """
+    ids = np.asarray(edge_ids, dtype=np.int64).ravel()
+    w_new = np.asarray(new_weights, dtype=np.int64).ravel()
+    if ids.shape != w_new.shape:
+        raise ValueError(
+            f"edge_ids and new_weights disagree: {ids.shape} vs {w_new.shape}"
+        )
+    m = graph.n_edges
+    if ids.size:
+        if int(ids.min()) < 0 or int(ids.max()) >= m:
+            raise ValueError(f"edge_ids out of range for a {m}-edge graph")
+        if int(w_new.min()) < 0 or int(w_new.max()) >= int(INF32):
+            raise ValueError("new_weights must be non-negative int32 below INF32")
+    w = np.asarray(graph.w).astype(np.int32).copy()
+    w[ids] = w_new.astype(np.int32)
+    return COOGraph(graph.src, graph.dst, jnp.asarray(w), graph.n_nodes)
+
+
+__all__ = ["apply_weight_update"]

@@ -9,6 +9,10 @@ fuses all three into one pass over ``tent``/``explored``:
     frontier[v]   = tent[v] < INF  &  tent[v]//Δ == i  &  tent[v] < explored[v]
     any_frontier  = OR-reduce(frontier)
     next_bucket   = min over v of tent[v]//Δ restricted to buckets > i
+                    and unsettled vertices (tent[v] < explored[v]) —
+                    bitwise identical on cold solves, and the rule that
+                    lets warm re-solves (repro.dynamic) skip buckets the
+                    repair never touched (DESIGN.md §11)
 
 Grid is 1-D over row blocks of the (padded) column-major tent layout;
 the two scalar outputs accumulate across sequential grid steps into a
@@ -47,7 +51,7 @@ def bucket_scan_kernel(i_ref, tent_ref, explored_ref, frontier_ref,
         next_ref[0, 0] = jnp.int32(_IMAX)
 
     any_ref[0, 0] = jnp.maximum(any_ref[0, 0], f.any().astype(jnp.int32))
-    nb = jnp.where(b > i, b, _IMAX).min().astype(jnp.int32)
+    nb = jnp.where((b > i) & (t < e), b, _IMAX).min().astype(jnp.int32)
     next_ref[0, 0] = jnp.minimum(next_ref[0, 0], nb)
 
 

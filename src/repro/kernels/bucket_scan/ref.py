@@ -10,9 +10,15 @@ _IMAX = jnp.int32(2**31 - 1)
 
 
 def bucket_scan_ref(tent, explored, bucket_i, *, delta: int):
-    """tent/explored int32[n] → (frontier bool[n], any bool, next int32)."""
+    """tent/explored int32[n] → (frontier bool[n], any bool, next int32).
+
+    The next-bucket minimum only counts unsettled vertices
+    (``tent < explored``) — identical on cold solves (future buckets are
+    always unexplored, DESIGN.md §11) and the bucket-skipping rule warm
+    re-solves rely on; must stay in lockstep with ``core.backends
+    .scan_bucket`` and the Pallas kernel."""
     fin = tent < _INF
     b = jnp.where(fin, tent // delta, _IMAX)
     frontier = fin & (b == bucket_i) & (tent < explored)
-    nxt = jnp.where(b > bucket_i, b, _IMAX).min()
+    nxt = jnp.where((b > bucket_i) & (tent < explored), b, _IMAX).min()
     return frontier, frontier.any(), nxt

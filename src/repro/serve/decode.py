@@ -158,11 +158,23 @@ class SSSPServer:
     the plan is built with ``fallback=True``: a microbatch that trips
     the compacted-frontier overflow flag is re-answered full-width at
     the façade's single fallback point (tuning may move time, never
-    answers)."""
+    answers).
+
+    Dynamic graphs: the server holds its plan *resident* across the
+    query stream, so edge-cost updates (``update(edge_ids, weights)``)
+    are applied to the live plan between microbatches — weights swap,
+    topology and compiled programs stay (repro.dynamic, DESIGN.md §11).
+    """
 
     def __init__(self, graph, config=None, *, batch_size: int = 8,
                  free_mask=None, tune: bool = False,
                  tune_cache: Optional[str] = None):
+        import warnings
+
+        warnings.warn(
+            "SSSPServer is deprecated: use repro.api.Engine(...).plan("
+            "fallback=True) with MultiSource queries (DESIGN.md §10)",
+            DeprecationWarning, stacklevel=2)
         from repro.api import Engine
         from repro.core import DeltaConfig
         config = config or DeltaConfig()
@@ -176,6 +188,7 @@ class SSSPServer:
         self.free_mask = free_mask
         self.batch_size = batch_size
         self.queue: List[SSSPQuery] = []
+        self._pending_updates: List[tuple] = []
 
     @property
     def plan(self):
@@ -187,9 +200,26 @@ class SSSPServer:
             raise ValueError("point-to-point queries need a pred_mode")
         self.queue.append(query)
 
+    def update(self, edge_ids, new_weights):
+        """Queue a dynamic edge-cost update batch (repro.dynamic). The
+        server holds one resident plan for the lifetime of the graph;
+        updates are applied to it *between* query microbatches — at the
+        start of the next ``step()`` — so every query inside a batch is
+        answered against one consistent weight snapshot."""
+        self._pending_updates.append((edge_ids, new_weights))
+
+    def _apply_updates(self):
+        for edge_ids, new_weights in self._pending_updates:
+            self._plan.update(edge_ids, new_weights)
+        if self._pending_updates:
+            self.graph = self._plan.graph
+        self._pending_updates = []
+
     def step(self) -> List[SSSPQuery]:
-        """Serve one microbatch; returns the completed queries."""
+        """Serve one microbatch; returns the completed queries. Pending
+        weight updates are applied first (between microbatches)."""
         from repro.api import MultiSource, extract_path
+        self._apply_updates()
         if not self.queue:
             return []
         batch = self.queue[:self.batch_size]

@@ -174,13 +174,25 @@ def candidate_configs(
     return out
 
 
+def _solver_no_warn(graph, cfg, free_mask=None):
+    """Internal solver construction: the tuner measures through the
+    legacy solver shape on purpose (one warmed object per candidate),
+    which must not surface the shim's DeprecationWarning to callers of
+    the supported tuning entry points."""
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return DeltaSteppingSolver(graph, cfg, free_mask=free_mask)
+
+
 def _candidate_solver(graph, cfg, sources, free_mask=None):
     """Build + warm up + validate one candidate's solver; ``None`` when
     the config is unusable for *any* probe source (overflow or build
     failure) — an overflowed run is a wrong-answer run and its time
     must never compete."""
     try:
-        solver = DeltaSteppingSolver(graph, cfg, free_mask=free_mask)
+        solver = _solver_no_warn(graph, cfg, free_mask=free_mask)
         for s in sources:  # warm up / compile + validate every source
             if bool(solver.solve(int(s)).overflow):
                 return None
@@ -218,7 +230,7 @@ def build_safe_solver(
     overflow flag per batch at serve time."""
 
     def build(c):
-        return DeltaSteppingSolver(
+        return _solver_no_warn(
             graph,
             c,
             free_mask=free_mask if c.strategy == "pallas" else None,

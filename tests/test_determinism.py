@@ -1,4 +1,4 @@
-"""Determinism guarantees of the engine (DESIGN.md §9).
+"""Determinism guarantees of the engine (DESIGN.md §9, §11).
 
 The paper's CAS loop is deterministic only up to ties (which thread wins
 a same-cost race is timing-dependent). Our scatter-min / all-reduce-min
@@ -9,12 +9,16 @@ runs, across backends, and across mesh shapes (1-device vs 8-device
 host meshes, checked in a subprocess because the forced device count
 must be set before JAX initializes).
 
-``argmin`` mode is also deterministic (a pure function of converged
-distances), but may legitimately pick a *different* shortest-path tree
-than packed mode: packed keeps the first settled tight parent (later
-equal-cost candidates fail the C4 ``cand < tent`` filter), argmin picks
-the smallest-id tight parent among all edges. The divergence is pinned
-on a crafted two-path tie graph below.
+Tie-breaking has two regimes (DESIGN.md §11). On the canonical-ties
+graph class (every weight >= 1) the packed C4 filter compares whole
+(cost, pred) words, so the converged word is the schedule-independent
+(dist, smallest-id tight parent) — identical to what ``argmin`` mode
+recovers post hoc, pinned on a crafted two-path tie graph below. That
+trajectory independence is what makes warm-started dynamic re-solves
+(repro.dynamic) bitwise reproducible. Zero-weight graphs keep the
+historical first-settled tie-break (the canonical rule could close a
+predecessor cycle inside a zero-weight tie group), pinned on a
+zero-weight twin of the tie graph.
 """
 import os
 import subprocess
@@ -32,6 +36,7 @@ from repro.core import (
     validate_pred_tree,
     walk_pred_tree,
 )
+from repro.core.backends import graph_is_canonical
 from repro.graphs import watts_strogatz
 from repro.graphs.structures import COOGraph
 
@@ -114,13 +119,17 @@ def _tie_graph():
                     w=np.array([1, 9, 9, 1], np.int32), n_nodes=4)
 
 
-def test_argmin_and_packed_pick_different_valid_trees():
-    """Documented divergence: packed keeps the first settled tight
-    parent (vertex 2 — the later tie candidate from vertex 1 fails the
-    C4 filter); argmin recovers the smallest-id tight parent (vertex 1).
-    Distances agree bitwise; both trees are valid and walk back to the
-    source reproducing dist exactly."""
+def test_packed_ties_are_canonical_on_positive_weights():
+    """DESIGN.md §11: on the canonical-ties class (all weights >= 1) the
+    packed C4 filter compares whole (cost, pred) words, so the later tie
+    candidate from vertex 1 *replaces* the first-settled parent 2 — the
+    converged tree is the schedule-independent smallest-id tight-parent
+    tree, identical to what argmin mode recovers from distances. (This
+    trajectory independence is the warm-start bitwise contract's
+    foundation.) Distances agree bitwise; the tree is valid and walks
+    back to the source reproducing dist exactly."""
     g = _tie_graph()
+    assert graph_is_canonical(g)
     with enable_x64():
         packed = DeltaSteppingSolver(
             g, DeltaConfig(delta=2, pred_mode="packed")).solve(0)
@@ -134,11 +143,36 @@ def test_argmin_and_packed_pick_different_valid_trees():
     dref, _ = dijkstra(g, 0)
     np.testing.assert_array_equal(d_packed, dref)
     np.testing.assert_array_equal(d_argmin, dref)
-    assert p_packed[3] == 2                  # first settled tight parent
-    assert p_argmin[3] == 1                  # smallest-id tight parent
+    assert p_packed[3] == 1                  # smallest-id tight parent
+    np.testing.assert_array_equal(p_packed, p_argmin)
     for pred in (p_packed, p_argmin):
         assert validate_pred_tree(g, 0, dref, pred)
         assert walk_pred_tree(g, 0, dref, pred)
+
+
+def test_packed_ties_stay_temporal_on_zero_weights():
+    """Zero-weight twin of the tie graph: 0 →(0) 2 →(10) 3 and
+    0 →(10) 1 →(0) 3, dist[3] = 10 both ways. The graph leaves the
+    canonical class, so the packed filter keeps the historical strict
+    distance comparison: parent 2 settles first (bucket 0) and the later
+    equal-cost candidate from vertex 1 is blocked — pred[3] == 2, not
+    the smaller id 1. The first-settled rule is what keeps packed trees
+    acyclic inside zero-weight tie groups (argmin is documented as
+    unsupported there)."""
+    g = COOGraph(src=np.array([0, 2, 0, 1], np.int32),
+                 dst=np.array([2, 3, 1, 3], np.int32),
+                 w=np.array([0, 10, 10, 0], np.int32), n_nodes=4)
+    assert not graph_is_canonical(g)
+    with enable_x64():
+        res = DeltaSteppingSolver(
+            g, DeltaConfig(delta=2, pred_mode="packed")).solve(0)
+        dist = np.asarray(res.dist, np.int64)
+        pred = np.asarray(res.pred)
+    dref, _ = dijkstra(g, 0)
+    np.testing.assert_array_equal(dist, dref)
+    assert pred[3] == 2                      # first settled tight parent
+    assert validate_pred_tree(g, 0, dref, pred)
+    assert walk_pred_tree(g, 0, dref, pred)
 
 
 def test_argmin_is_deterministic_across_backends():

@@ -1,0 +1,410 @@
+"""Dynamic-graph update subsystem (repro.dynamic, DESIGN.md §11).
+
+The load-bearing contract: a warm re-solve after a k-edge perturbation
+is **bitwise identical** — dist AND pred, packed (cost, pred) words
+included — to a cold solve of the updated graph, across all five
+relaxation backends. The CI ``sharded`` job runs this file under an
+8-device host mesh, so the sharded backends are covered with real
+cross-device collectives.
+
+Also covered: the repair-cone bookkeeping (telemetry counts, bucket
+skipping), the documented cold fallbacks (increases without a
+predecessor tree, packed mode outside the canonical-ties class, an
+overflowed resident state), update-batch composition and validation,
+the ``UpdateBatch`` query packaging, serve-layer update batches between
+microbatches, and the tuning-record reuse across in-range cost churn.
+"""
+import numpy as np
+import pytest
+
+from _property_driver import null_ctx
+from repro.api import Engine, MultiSource, SingleSource, UpdateBatch
+from repro.compat import enable_x64
+from repro.core import DeltaConfig, dijkstra, walk_pred_tree
+from repro.dynamic import apply_weight_update, plan_repair, resident_words
+from repro.dynamic.repair import Resident
+from repro.graphs import square_lattice, watts_strogatz
+from repro.graphs.structures import COOGraph, INF32
+
+BACKENDS = ("edge", "ell", "pallas", "sharded_edge", "sharded_ell")
+
+_INF = int(INF32)
+
+
+def _cfg(strategy, pred_mode, delta=10):
+    return DeltaConfig(delta=delta, strategy=strategy, pred_mode=pred_mode,
+                       interpret=True)
+
+
+def _perturb(rng, w, k, lo=1, hi=60):
+    """k random edge ids + mixed-sign in-range replacement weights."""
+    ids = rng.choice(w.shape[0], size=min(k, w.shape[0]), replace=False)
+    neww = np.clip(w[ids] + rng.integers(-8, 9, size=ids.shape[0]), lo, hi)
+    return ids, neww
+
+
+def _x64_if(packed):
+    return enable_x64() if packed else null_ctx()
+
+
+@pytest.mark.parametrize("pred_mode", ["none", "argmin", "packed"])
+@pytest.mark.parametrize("strategy", BACKENDS)
+def test_warm_resolve_bitwise_equals_cold(strategy, pred_mode):
+    """The acceptance contract, per backend x pred mode: three stacked
+    perturbation batches, each warm re-solve bitwise equal to a cold
+    solve of the updated graph and exact vs the Dijkstra oracle."""
+    g = watts_strogatz(240, 6, 0.05, seed=3)
+    rng = np.random.default_rng(17)
+    packed = pred_mode == "packed"
+    with _x64_if(packed):
+        plan = Engine(g, _cfg(strategy, pred_mode)).plan()
+        plan.solve(SingleSource(0))
+        cur = g
+        for _ in range(3):
+            ids, neww = _perturb(rng, np.asarray(plan.graph.w), k=12)
+            warm = plan.solve(UpdateBatch(ids, neww))
+            cur = apply_weight_update(cur, ids, neww)
+            cold = Engine(cur, _cfg(strategy, pred_mode)).plan().solve(
+                SingleSource(0))
+            np.testing.assert_array_equal(
+                np.asarray(warm.dist), np.asarray(cold.dist))
+            np.testing.assert_array_equal(
+                np.asarray(warm.pred), np.asarray(cold.pred))
+            dref, _ = dijkstra(cur, 0)
+            np.testing.assert_array_equal(
+                np.asarray(warm.dist, np.int64), dref)
+            if pred_mode != "none":
+                assert walk_pred_tree(cur, 0, dref, np.asarray(warm.pred))
+            # mixed batches contain increases: 'none' mode must have
+            # fallen back cold, the tree-tracking modes repair warm
+            assert bool(warm.telemetry.warm) == (pred_mode != "none")
+
+
+def test_decrease_only_stays_warm_without_pred_tree():
+    """pred_mode='none' tracks no tree, but decrease-only batches need
+    none — the repair must stay warm and bitwise-equal."""
+    g = watts_strogatz(300, 6, 0.05, seed=5)
+    plan = Engine(g, _cfg("edge", "none")).plan()
+    plan.solve(SingleSource(0))
+    w = np.asarray(plan.graph.w)
+    ids = np.nonzero(w > 5)[0][:20]
+    neww = w[ids] - 4
+    warm = plan.solve(UpdateBatch(ids, neww))
+    assert bool(warm.telemetry.warm)
+    g2 = apply_weight_update(g, ids, neww)
+    cold = Engine(g2, _cfg("edge", "none")).plan().solve(SingleSource(0))
+    np.testing.assert_array_equal(np.asarray(warm.dist),
+                                  np.asarray(cold.dist))
+
+
+def test_warm_skips_untouched_buckets():
+    """A far-end perturbation on a long-diameter lattice must not re-walk
+    the whole bucket sequence: the unsettled-only next-bucket scan jumps
+    straight to the repair cone's buckets."""
+    side = 24
+    g = square_lattice(side, weighted=True)
+    plan = Engine(g, _cfg("edge", "argmin")).plan()
+    full = plan.solve(SingleSource(0))
+    b_cold = int(full.telemetry.buckets)
+    # perturb one far-corner edge (the highest-dst edges sit far from
+    # vertex 0 on a lattice built row-major)
+    far_edge = int(np.argmax(np.asarray(g.dst)))
+    old_w = int(np.asarray(g.w)[far_edge])
+    warm = plan.solve(UpdateBatch([far_edge], [old_w + 7]))
+    assert bool(warm.telemetry.warm)
+    assert int(warm.telemetry.buckets) < b_cold / 2, (
+        f"warm visited {int(warm.telemetry.buckets)} of {b_cold} buckets"
+    )
+    g2 = apply_weight_update(g, [far_edge], [old_w + 7])
+    cold = Engine(g2, _cfg("edge", "argmin")).plan().solve(SingleSource(0))
+    np.testing.assert_array_equal(np.asarray(warm.dist),
+                                  np.asarray(cold.dist))
+    np.testing.assert_array_equal(np.asarray(warm.pred),
+                                  np.asarray(cold.pred))
+
+
+def test_cascade_outgrowing_repair_twin_stays_exact():
+    """A tiny seed whose improvement cascades across most of the graph
+    overflows the frontier-capped repair twin; resolve must re-run the
+    same warm state full-width and still match the cold solve bitwise
+    (the cap moves time, never answers)."""
+    side = 20
+    g = square_lattice(side, weighted=True)
+    # inflate every weight so one near-source shortcut rewrites almost
+    # every distance downstream; Δ=1000 packs the whole cascade into a
+    # couple of buckets, so the per-sweep frontier far exceeds the
+    # repair twin's cap (one seed -> cap 64) and the overflow re-run
+    # path must fire
+    w = np.asarray(g.w) * 10
+    g = COOGraph(g.src, g.dst, np.asarray(w, np.int32), g.n_nodes)
+    plan = Engine(g, _cfg("edge", "argmin", delta=1000)).plan()
+    plan.solve(SingleSource(0))
+    runs = []
+    orig = plan._run_warm
+    plan._run_warm = lambda be, t, e: runs.append(be is plan.backend) or orig(
+        be, t, e)
+    warm = plan.solve(UpdateBatch([0], [1]))   # edge 0: 0 -> neighbor
+    assert bool(warm.telemetry.warm)
+    assert runs == [False, True], runs         # twin overflowed, rerun full
+    g2 = apply_weight_update(g, [0], [1])
+    cold = Engine(g2, _cfg("edge", "argmin", delta=1000)).plan().solve(
+        SingleSource(0))
+    np.testing.assert_array_equal(np.asarray(warm.dist),
+                                  np.asarray(cold.dist))
+    np.testing.assert_array_equal(np.asarray(warm.pred),
+                                  np.asarray(cold.pred))
+
+
+def test_distance_neutral_tie_change_updates_argmin_pred():
+    """A decrease landing exactly on dist[v] creates a new smaller-id
+    tight parent without moving any distance. The warm no-op fast path
+    must still hand back the argmin tree of the *updated* graph, not the
+    stale resident one (regression: review finding on the repaired==0
+    short-circuit)."""
+    src = np.array([0, 0, 2, 1], np.int32)
+    dst = np.array([1, 2, 3, 3], np.int32)
+    w = np.array([1, 1, 5, 6], np.int32)
+    g = COOGraph(src, dst, w, 4)
+    plan = Engine(g, _cfg("edge", "argmin", delta=3)).plan()
+    base = plan.solve(SingleSource(0))
+    assert int(base.pred[3]) == 2            # only tight parent
+    warm = plan.solve(UpdateBatch([3], [5]))  # 1->3 now tight too, dist same
+    assert bool(warm.telemetry.warm) and int(warm.telemetry.repaired) == 0
+    g2 = apply_weight_update(g, [3], [5])
+    cold = Engine(g2, _cfg("edge", "argmin", delta=3)).plan().solve(
+        SingleSource(0))
+    np.testing.assert_array_equal(np.asarray(warm.dist),
+                                  np.asarray(cold.dist))
+    np.testing.assert_array_equal(np.asarray(warm.pred),
+                                  np.asarray(cold.pred))
+    assert int(warm.pred[3]) == 1            # smallest-id tight parent
+    # and the refreshed residency carries the corrected tree forward
+    follow = plan.resolve(warm=True)
+    np.testing.assert_array_equal(np.asarray(follow.pred),
+                                  np.asarray(cold.pred))
+
+
+def test_residency_survives_overflow_demotion():
+    """An overflow on a fallback plan demotes to a full-width twin; the
+    resident state must ride along so update/resolve keep working
+    (regression: review finding on the demotion path)."""
+    g = watts_strogatz(200, 8, 0.05, seed=25)
+    cfg = DeltaConfig(delta=10, pred_mode="argmin", strategy="ell",
+                      frontier_cap=4)
+    plan = Engine(g, cfg).plan(fallback=True)
+    plan.solve(SingleSource(0))              # overflows cap=4 -> demotes
+    assert plan._demoted is not None
+    w = np.asarray(plan.graph.w)
+    warm = plan.solve(UpdateBatch([0], [int(w[0]) + 3]))
+    g2 = apply_weight_update(g, [0], [int(w[0]) + 3])
+    cold = Engine(g2, DeltaConfig(delta=10, pred_mode="argmin")).plan().solve(
+        SingleSource(0))
+    np.testing.assert_array_equal(np.asarray(warm.dist),
+                                  np.asarray(cold.dist))
+    np.testing.assert_array_equal(np.asarray(warm.pred),
+                                  np.asarray(cold.pred))
+
+
+def test_increase_without_pred_tree_falls_back_cold():
+    g = watts_strogatz(200, 6, 0.05, seed=7)
+    plan = Engine(g, _cfg("edge", "none")).plan()
+    plan.solve(SingleSource(0))
+    w = np.asarray(plan.graph.w)
+    warm = plan.solve(UpdateBatch([3], [int(w[3]) + 10]))
+    assert not bool(warm.telemetry.warm)     # cold fallback, documented
+    g2 = apply_weight_update(g, [3], [int(w[3]) + 10])
+    dref, _ = dijkstra(g2, 0)
+    np.testing.assert_array_equal(np.asarray(warm.dist, np.int64), dref)
+
+
+def test_zero_weight_graph_packed_falls_back_cold():
+    """Outside the canonical-ties class the packed fixed point is
+    schedule-dependent, so the warm contract refuses and the resolve
+    runs cold — answers still exact and bitwise-stable."""
+    src = np.array([0, 0, 1, 2], np.int32)
+    dst = np.array([1, 2, 3, 3], np.int32)
+    w = np.array([0, 5, 7, 2], np.int32)     # zero weight: not canonical
+    g = COOGraph(src, dst, w, 4)
+    with enable_x64():
+        plan = Engine(g, _cfg("edge", "packed", delta=3)).plan()
+        plan.solve(SingleSource(0))
+        warm = plan.solve(UpdateBatch([1], [4]))
+        assert not bool(warm.telemetry.warm)
+        g2 = apply_weight_update(g, [1], [4])
+        cold = Engine(g2, _cfg("edge", "packed", delta=3)).plan().solve(
+            SingleSource(0))
+        np.testing.assert_array_equal(np.asarray(warm.dist),
+                                      np.asarray(cold.dist))
+        np.testing.assert_array_equal(np.asarray(warm.pred),
+                                      np.asarray(cold.pred))
+
+
+def test_overflowed_resident_state_refused():
+    g = watts_strogatz(200, 6, 0.05, seed=9)
+    resident = Resident(source=0,
+                        dist=np.zeros(g.n_nodes, np.int64),
+                        pred=np.full(g.n_nodes, -1, np.int32),
+                        w=np.asarray(g.w, np.int32),
+                        overflow=True)
+    rep, reason = plan_repair(g, resident, pred_mode="none")
+    assert rep is None and "overflow" in reason
+
+
+def test_noop_update_short_circuits():
+    """Re-submitting identical weights is distance-neutral: the resident
+    answer stands, zero buckets processed, telemetry says so."""
+    g = watts_strogatz(200, 6, 0.05, seed=11)
+    plan = Engine(g, _cfg("edge", "argmin")).plan()
+    base = plan.solve(SingleSource(0))
+    w = np.asarray(plan.graph.w)
+    res = plan.solve(UpdateBatch([0, 5, 9], w[[0, 5, 9]]))
+    assert bool(res.telemetry.warm)
+    assert int(res.telemetry.repaired) == 0
+    assert int(res.telemetry.buckets) == 0
+    np.testing.assert_array_equal(np.asarray(res.dist),
+                                  np.asarray(base.dist))
+    np.testing.assert_array_equal(np.asarray(res.pred),
+                                  np.asarray(base.pred))
+
+
+def test_update_batches_compose_before_resolve():
+    """Several update() calls between resolves diff against one resident
+    snapshot — the warm result equals the cold solve of the *final*
+    graph."""
+    g = watts_strogatz(260, 6, 0.05, seed=13)
+    plan = Engine(g, _cfg("edge", "argmin")).plan()
+    plan.solve(SingleSource(0))
+    rng = np.random.default_rng(23)
+    cur = g
+    for _ in range(3):                       # three batches, no resolve
+        ids, neww = _perturb(rng, np.asarray(plan.graph.w), k=8)
+        plan.update(ids, neww)
+        cur = apply_weight_update(cur, ids, neww)
+    warm = plan.resolve(warm=True)
+    assert bool(warm.telemetry.warm)
+    cold = Engine(cur, _cfg("edge", "argmin")).plan().solve(SingleSource(0))
+    np.testing.assert_array_equal(np.asarray(warm.dist),
+                                  np.asarray(cold.dist))
+    np.testing.assert_array_equal(np.asarray(warm.pred),
+                                  np.asarray(cold.pred))
+
+
+def test_update_validation():
+    g = watts_strogatz(50, 4, 0.05, seed=1)
+    plan = Engine(g, _cfg("edge", "argmin")).plan()
+    with pytest.raises(ValueError):
+        plan.update([g.n_edges], [5])        # edge id out of range
+    with pytest.raises(ValueError):
+        plan.update([0], [-1])               # negative weight
+    with pytest.raises(ValueError):
+        plan.update([0], [_INF])             # INF sentinel as a weight
+    with pytest.raises(ValueError):
+        plan.update([0, 1], [5])             # shape mismatch
+
+
+def test_resolve_without_resident_raises():
+    g = watts_strogatz(50, 4, 0.05, seed=1)
+    plan = Engine(g, _cfg("edge", "argmin")).plan()
+    with pytest.raises(ValueError, match="resident"):
+        plan.resolve()
+
+
+def test_cold_resolve_refreshes_residency():
+    """resolve(warm=False) is a full re-solve that still refreshes the
+    resident snapshot, so a later warm resolve repairs from it."""
+    g = watts_strogatz(200, 6, 0.05, seed=15)
+    plan = Engine(g, _cfg("edge", "argmin")).plan()
+    plan.solve(SingleSource(0))
+    w = np.asarray(plan.graph.w)
+    plan.update([2], [int(w[2]) + 5])
+    cold = plan.resolve(warm=False)
+    assert not bool(cold.telemetry.warm)
+    warm = plan.resolve(warm=True)           # no changes since: no-op
+    assert int(warm.telemetry.repaired) == 0
+    np.testing.assert_array_equal(np.asarray(warm.dist),
+                                  np.asarray(cold.dist))
+
+
+def test_resident_words_roundtrip():
+    """(dist, pred) -> packed words reconstruction is bit-exact against
+    pack.py's layout, including the source and unreachable sentinels."""
+    from repro.core import pack as packing
+    dist = np.array([0, 7, _INF], np.int64)
+    pred = np.array([-1, 0, -1], np.int32)
+    words = resident_words(dist, pred, source=0, packed=True)
+    assert words[0] == 0                     # pack(0, source=0)
+    assert words[1] == (7 << 32) | 0
+    assert words[2] == packing.INF_PACKED
+    plain = resident_words(dist, pred, source=0, packed=False)
+    assert plain.dtype == np.int32 and plain[2] == _INF
+
+
+def test_grid_plan_rejects_weight_updates():
+    from repro.graphs import grid_map
+
+    g, free = grid_map(8, 8, seed=0)
+    plan = Engine(
+        g, DeltaConfig(delta=13, strategy="pallas", interpret=True,
+                       pred_mode="none"),
+        free_mask=free).plan()
+    with pytest.raises(ValueError, match="grid"):
+        plan.update([0], [5])
+
+
+def test_fingerprint_stable_across_inrange_updates(tmp_path):
+    """The tune satellite: in-range cost churn keeps the cache
+    fingerprint — a plan's tuning record survives updates, and a fresh
+    engine over the updated graph still hits the cache."""
+    from repro.tune import TuningCache, fingerprint, graph_stats
+
+    g = watts_strogatz(300, 6, 0.05, seed=19)
+    cache = str(tmp_path / "tuning.json")
+    # measured search once, persisted to the cache file
+    plan = Engine(g, "auto", tune=True, tune_cache=cache).plan(sources=(0,))
+    assert plan.record is not None and plan.record.source == "measured"
+    fp0 = plan.record.fingerprint
+    plan.solve(SingleSource(0))
+    # perturb within the existing weight range: fingerprint unchanged
+    w = np.asarray(plan.graph.w)
+    lo, hi = int(w.min()), int(w.max())
+    rng = np.random.default_rng(29)
+    ids = rng.choice(g.n_edges, size=20, replace=False)
+    plan.update(ids, rng.integers(lo, hi + 1, size=20))
+    assert fingerprint(graph_stats(plan.graph)) == fp0
+    # a fresh engine over the updated graph reuses the cached record:
+    # it never measures (no tune=True), so a 'measured' provenance can
+    # only have come from the cache file
+    plan2 = Engine(plan.graph, "auto", tune_cache=cache).plan()
+    assert plan2.record.source == "measured"
+    assert plan2.record.fingerprint == fp0
+    assert plan2.record.delta == plan.record.delta
+    assert TuningCache(cache).get(fp0) is not None
+
+
+def test_server_applies_updates_between_microbatches():
+    """SSSPServer holds its plan resident: queued weight updates apply at
+    the next step() boundary, so a microbatch is answered against one
+    consistent snapshot — before-update answers match the old graph,
+    after-update answers the new one."""
+    g = watts_strogatz(200, 6, 0.05, seed=21)
+    from repro.serve import SSSPQuery, SSSPServer
+
+    with pytest.deprecated_call():
+        srv = SSSPServer(g, DeltaConfig(delta=10, pred_mode="argmin"),
+                         batch_size=2)
+    srv.submit(SSSPQuery(qid=0, source=0))
+    (q0,) = srv.step()
+    dref, _ = dijkstra(g, 0)
+    np.testing.assert_array_equal(q0.dist, dref)
+
+    w = np.asarray(srv.plan.graph.w)
+    ids = np.arange(10)
+    neww = np.clip(w[ids] + 9, 1, None)
+    srv.update(ids, neww)
+    assert srv.plan.graph is g or True       # not yet applied
+    srv.submit(SSSPQuery(qid=1, source=0))
+    (q1,) = srv.step()                       # update lands first
+    g2 = apply_weight_update(g, ids, neww)
+    dref2, _ = dijkstra(g2, 0)
+    np.testing.assert_array_equal(q1.dist, dref2)
+    assert srv.graph is srv.plan.graph       # server view refreshed

@@ -1,0 +1,76 @@
+"""Direct coverage of ``api.extract_path`` edge cases (previously only
+covered indirectly through SSSPServer): trivial source==target paths,
+unreachable targets, and the n-hop cycle guard that turns an off-tree
+predecessor cycle (the pred_mode='argmin' zero-weight hazard) into
+``None`` instead of an infinite walk.
+"""
+import numpy as np
+import pytest
+
+from repro.api import Engine, PointToPoint, extract_path
+from repro.core import DeltaConfig
+from repro.graphs.structures import COOGraph
+
+
+def test_source_equals_target_is_single_vertex_path():
+    pred = np.array([-1, 0, 1], np.int32)
+    assert extract_path(pred, 0, 0, 3) == [0]
+    # even a bogus pred entry at the source cannot matter
+    assert extract_path(np.array([2, 0, 1], np.int32), 1, 1, 3) == [1]
+
+
+def test_unreachable_target_returns_none():
+    pred = np.array([-1, 0, -1], np.int32)   # vertex 2 off-tree
+    assert extract_path(pred, 0, 2, 3) is None
+
+
+def test_chain_not_reaching_source_returns_none():
+    """A valid-looking chain rooted at the *wrong* vertex must not be
+    reported as a path."""
+    pred = np.array([-1, -1, 1], np.int32)   # 2 -> 1 -> root(1), not 0
+    assert extract_path(pred, 0, 2, 3) is None
+
+
+def test_cycle_guard_trips():
+    """An off-tree predecessor cycle (possible under argmin recovery
+    with zero-weight ties) terminates at the n-hop bound with None."""
+    pred = np.array([-1, 2, 1, 2], np.int32)  # 1 <-> 2 cycle, 3 hangs off
+    assert extract_path(pred, 0, 3, 4) is None
+    assert extract_path(pred, 0, 1, 4) is None
+
+
+def test_exact_n_hop_chain_is_returned():
+    """A Hamiltonian-path tree needs exactly n-1 hops — the guard must
+    not clip the longest legitimate chain."""
+    n = 64
+    pred = np.arange(-1, n - 1, dtype=np.int32)   # pred[i] = i - 1
+    path = extract_path(pred, 0, n - 1, n)
+    assert path == list(range(n))
+
+
+def test_facade_p2p_uses_same_semantics():
+    """The PointToPoint dispatch routes through the same extract_path:
+    unreachable target -> distance INF32, path None."""
+    import jax.numpy as jnp
+
+    g = COOGraph(jnp.array([0], jnp.int32), jnp.array([1], jnp.int32),
+                 jnp.array([4], jnp.int32), 3)   # vertex 2 isolated
+    plan = Engine(g, DeltaConfig(delta=4, pred_mode="argmin")).plan()
+    res = plan.solve(PointToPoint(0, 2))
+    assert res.distance == 2**31 - 1 and res.path is None
+    res01 = plan.solve(PointToPoint(0, 1))
+    assert res01.distance == 4 and res01.path == [0, 1]
+    same = plan.solve(PointToPoint(0, 0))
+    assert same.distance == 0 and same.path == [0]
+
+
+def test_rejects_oob_ids_upstream():
+    """extract_path itself trusts its inputs; the façade validates ids
+    before it is ever reached."""
+    import jax.numpy as jnp
+
+    g = COOGraph(jnp.array([0], jnp.int32), jnp.array([1], jnp.int32),
+                 jnp.array([4], jnp.int32), 2)
+    plan = Engine(g, DeltaConfig(delta=4, pred_mode="argmin")).plan()
+    with pytest.raises(ValueError, match="out of range"):
+        plan.solve(PointToPoint(0, 5))

@@ -28,6 +28,7 @@ API_EXPORTS = {
     "SingleSource",
     "SingleSourceResult",
     "Telemetry",
+    "UpdateBatch",
     "extract_path",
 }
 
@@ -91,8 +92,12 @@ def test_engine_and_plan_surface():
                  jnp.array([3], jnp.int32), 2)
     plan = api.Engine(g, core.DeltaConfig(delta=4)).plan()
     for attr in ("config", "graph", "backend", "record", "solve",
-                 "explain"):
+                 "explain", "update", "resolve"):
         assert hasattr(plan, attr), attr
+    assert list(inspect.signature(api.Plan.update).parameters) == [
+        "self", "edge_ids", "new_weights"]
+    assert list(inspect.signature(api.Plan.resolve).parameters) == [
+        "self", "warm"]
     assert plan.record is None              # no tuning inputs, no record
     assert isinstance(plan.explain(), dict)
 
@@ -108,5 +113,8 @@ def test_query_algebra_fields():
         "source", "radius"]
     assert [f for f in api.ManyToMany.__dataclass_fields__] == [
         "sources", "targets", "tile"]
+    assert [f for f in api.UpdateBatch.__dataclass_fields__] == [
+        "edge_ids", "new_weights", "warm"]
     assert [f for f in api.Telemetry.__dataclass_fields__] == [
-        "buckets", "inner_iters", "overflow", "fallback"]
+        "buckets", "inner_iters", "overflow", "fallback", "warm",
+        "repaired", "cone"]
