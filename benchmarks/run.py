@@ -38,6 +38,7 @@ def main(argv=None) -> int:
         bench_queries,
         bench_rmat,
         bench_scaling,
+        bench_scaling_shards,
         bench_sharded,
         bench_smallworld,
     )
@@ -46,8 +47,8 @@ def main(argv=None) -> int:
     modules = {}
     for mod in (bench_smallworld, bench_delta_sweep, bench_scaling,
                 bench_preprocess, bench_rmat, bench_gamemap,
-                bench_multisource, bench_sharded, bench_queries,
-                bench_dynamic):
+                bench_multisource, bench_sharded, bench_scaling_shards,
+                bench_queries, bench_dynamic):
         modules[mod.__name__.rsplit(".", 1)[-1].removeprefix("bench_")] = mod
     if args.only is not None:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -247,6 +247,12 @@ class Plan:
             return PallasEllBackend.build(
                 self.graph, self.config, max_deg=self._adjacency_width()
             )
+        if self.config.strategy == "fused":
+            from repro.core.backends import FusedBackend
+
+            return FusedBackend.build(
+                self.graph, self.config, max_deg=self._adjacency_width()
+            )
         return make_backend(self.graph, self.config, free_mask=self.free_mask)
 
     def _adjacency_width(self) -> int:
@@ -269,26 +275,33 @@ class Plan:
         warm-eligible mode has a schedule-free fixed point (dist always;
         packed words on the canonical class — DESIGN.md §11), so the
         twin converges to bitwise the same answer as the plan's own
-        backend. Sharded/pallas plans keep their own backend."""
-        if self.config.strategy not in ("edge", "ell"):
+        backend. A ``fused`` plan gets a capped *fused* twin — staying
+        on the fused driver loop keeps the warm solve on the exact code
+        path the cold-identity lemma was checked against.
+        Sharded/pallas plans keep their own backend."""
+        if self.config.strategy not in ("edge", "ell", "fused"):
             return self.backend
         n = self.graph.n_nodes
         cap = self._twin_cap_floor
         while cap < repaired * 2:
             cap *= 2
         own_cap = self.config.frontier_cap or n
-        if cap >= n or (self.config.strategy == "ell" and cap >= own_cap):
+        if cap >= n or (
+            self.config.strategy in ("ell", "fused") and cap >= own_cap
+        ):
             return self.backend
         key = (cap, self._graph_version)
         if self._repair_twin_key != key:
-            from repro.core.backends import EllBackend
+            from repro.core.backends import EllBackend, FusedBackend
 
+            twin_strategy = "fused" if self.config.strategy == "fused" else "ell"
+            twin_cls = FusedBackend if twin_strategy == "fused" else EllBackend
             twin_cfg = dataclasses.replace(
-                self.config, strategy="ell", frontier_cap=cap
+                self.config, strategy=twin_strategy, frontier_cap=cap
             )
             # pinned pad width: cost churn must not move the twin's
             # compiled shapes (see _rebuild_backend)
-            self._repair_twin = EllBackend.build(
+            self._repair_twin = twin_cls.build(
                 self.graph, twin_cfg, max_deg=self._adjacency_width()
             )
             self._repair_twin_key = key

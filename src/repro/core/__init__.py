@@ -2,11 +2,13 @@
 from repro.core.backends import (
     EdgeBackend,
     EllBackend,
+    FusedBackend,
     GridPallasBackend,
     PallasEllBackend,
     RelaxBackend,
     ShardedEdgeBackend,
     ShardedEllBackend,
+    ShardedFusedBackend,
     edge_sweep,
     make_backend,
     resolve_n_shards,
@@ -36,10 +38,12 @@ __all__ = [
     "RelaxBackend",
     "EdgeBackend",
     "EllBackend",
+    "FusedBackend",
     "PallasEllBackend",
     "GridPallasBackend",
     "ShardedEdgeBackend",
     "ShardedEllBackend",
+    "ShardedFusedBackend",
     "make_backend",
     "resolve_n_shards",
     "scan_bucket",

@@ -13,6 +13,15 @@ outer/inner loop driver (``core.delta_stepping``) hosts every strategy:
   Pallas kernel with bucket bookkeeping fused by ``kernels/bucket_scan``;
   on game-map (occupancy-grid) instances the relaxation is instead the
   ``kernels/grid_relax`` min-plus stencil.
+* ``fused``  — the frontier-compacted ELL expansion with scan,
+  compaction and row gather fused into one ``kernels/frontier_relax``
+  Pallas call (DESIGN.md §12); the backend additionally implements the
+  driver's *fused light phase* protocol (``supports_fused_light`` /
+  ``fused_iter`` / ``fused_next``), so each inner iteration is one
+  kernel step plus O(cap·deg) XLA scatters instead of three full-width
+  passes. On hosts where the kernel cannot run compiled (plain CPU
+  without interpret mode) the build drops to the bitwise-identical jnp
+  twin — the strategy is then a loop-structure optimization only.
 * ``sharded_edge`` / ``sharded_ell`` — SPMD variants of the first two:
   edges (or ELL row blocks) are partitioned across a 1-D device mesh
   (``graphs.partition``), each sweep runs per-shard under ``shard_map``
@@ -20,6 +29,11 @@ outer/inner loop driver (``core.delta_stepping``) hosts every strategy:
   The merge reduces whole tent *words* — in ``packed`` mode the int64
   (cost, pred) word — so the sharded run is bitwise identical to the
   single-device engine, not merely distance-equal (DESIGN.md §9).
+* ``sharded_fused`` — the fused step per shard (each device scans and
+  compacts its owned vertex slice and gathers its local ELL rows),
+  composed with exactly the same all-reduce min-over-words merge, so
+  both contracts hold at once: bitwise ≡ single-device ``fused`` for
+  any shard count, and ``fused`` bitwise ≡ ``edge``/``ell``.
 
 A backend provides two traced operations over solver state:
 
@@ -63,6 +77,7 @@ from repro.graphs.structures import (
 )
 from repro.kernels.bucket_scan import bucket_scan
 from repro.kernels.ell_relax import ell_relax
+from repro.kernels.frontier_relax import frontier_relax
 from repro.kernels.grid_relax import grid_relax
 
 _IMAX = jnp.int32(2**31 - 1)
@@ -385,6 +400,98 @@ class PallasEllBackend(_FrontierCompactMixin, _PallasScanMixin,
         return tent, over
 
 
+def _kernel_viable(cfg) -> bool:
+    """Whether the fused ``pallas_call`` can actually execute here:
+    interpret mode anywhere (the CI configuration — CPU executes the
+    kernel *body* through the Pallas interpreter), compiled only on a
+    real TPU. Everywhere else the fused strategies run their jnp twin,
+    which is bitwise identical by construction (kernels/frontier_relax)
+    — the strategy selection never changes answers, only which engine
+    executes the same dataflow."""
+    return bool(cfg.interpret) or jax.default_backend() == "tpu"
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FusedBackend(_FrontierCompactMixin, RelaxBackend):
+    """Fused frontier strategy (DESIGN.md §12): the light phase runs the
+    driver's *fused light phase* protocol — one
+    ``kernels/frontier_relax`` step per inner iteration produces the
+    compacted frontier, its gathered ELL rows, the any-reduce and the
+    next-bucket min together, and the candidate words then flow through
+    the shared ``ell_relax_words`` path into an XLA scatter-min (C2
+    stays in XLA, so packed (cost, pred) words work unchanged). The
+    heavy pass and any generic ``sweep`` call fall back to the plain
+    compact-and-expand of ``EllBackend`` (the settled-set mask is not a
+    bucket-membership scan, so there is nothing for the kernel to
+    fuse)."""
+
+    supports_fused_light = True
+
+    light: ELLGraph
+    heavy: ELLGraph
+    delta: int = _static()
+    n: int = _static()
+    cap: int = _static()
+    kernel: bool = _static()
+    interpret: bool = _static()
+    canonical: bool = _static()
+
+    @property
+    def supports_vmap(self):
+        # the kernel path has no batching rule; the jnp twin vmaps fine
+        return not self.kernel
+
+    @classmethod
+    def build(cls, graph: COOGraph, cfg, max_deg=None) -> "FusedBackend":
+        light, heavy = _ell_blocks(graph, cfg.delta, max_deg)
+        return cls(light, heavy, cfg.delta, graph.n_nodes,
+                   cfg.frontier_cap or graph.n_nodes, _kernel_viable(cfg),
+                   cfg.interpret, graph_is_canonical(graph))
+
+    def _fused_step(self, dist, explored, bucket_i):
+        ell = self.light
+        return frontier_relax(
+            dist, explored, bucket_i, ell.nbr, ell.w, delta=self.delta,
+            cap=self.cap, base=0, sent=self.n,
+            backend="pallas" if self.kernel else "ref",
+            interpret=self.interpret)
+
+    def fused_iter(self, tent, explored, in_s, bucket_i, *, packed: bool):
+        """One whole light inner iteration: kernel step (scan + compact
+        + gather), settled-set bookkeeping, shared-path relaxation.
+        Replays the classic loop's op sequence on the same states —
+        explored/S updates read the *pre*-relaxation distances — so
+        state trajectories are bitwise those of ``edge``/``ell``
+        (DESIGN.md §12). An empty frontier makes every phase a sentinel
+        no-op, which is what lets the driver run this unconditionally."""
+        d = dist_of(tent, packed)
+        fidx, rows_n, rows_w, count, any_, _ = self._fused_step(
+            d, explored, bucket_i)
+        d_f = jnp.take(d, fidx, mode="fill", fill_value=INF32)
+        explored = explored.at[fidx].set(d_f, mode="drop")
+        in_s = in_s.at[fidx].set(True, mode="drop")
+        words = ell_relax_words(tent, fidx, rows_n, rows_w, n=self.n,
+                                packed=packed, canonical=self.canonical)
+        tent = tent.at[rows_n.ravel()].min(words.ravel(), mode="drop")
+        return tent, explored, in_s, any_, count > self.cap
+
+    def fused_next(self, dist, explored, bucket_i):
+        """Next-bucket min for the driver's bucket advance — the
+        kernel's scalar output (the fused replacement of the post-heavy
+        ``scan_bucket`` call; bitwise equal, same formulas)."""
+        if self.kernel:
+            return self._fused_step(dist, explored, bucket_i)[5]
+        return scan_bucket(dist, explored, bucket_i, delta=self.delta)[2]
+
+    def sweep(self, tent, mask, bucket_i, *, light: bool, packed: bool):
+        fidx, over = self.compact(mask)
+        ell = self.light if light else self.heavy
+        tent = ell_sweep(tent, fidx, ell.nbr, ell.w, n=self.n, packed=packed,
+                         canonical=self.canonical)
+        return tent, over
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class GridPallasBackend(_PallasScanMixin, RelaxBackend):
@@ -570,6 +677,91 @@ class ShardedEllBackend(_ShardedMixin, RelaxBackend):
         return self._shard_map(body, 2, 2)(tent, mask, nbr, w_ell)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedFusedBackend(ShardedEllBackend):
+    """Fused frontier strategy over an SPMD mesh: each device runs the
+    ``kernels/frontier_relax`` step on its *owned* vertex slice (scan +
+    compact + local ELL row gather with global neighbor ids), then the
+    iteration's three state updates merge with deterministic collectives
+    — tent words through the same all-reduce min as every sharded
+    backend (DESIGN.md §9), ``explored`` through ``pmin`` (each shard
+    lowers only its owned frontier entries, and a frontier member's
+    tent is strictly below its explored mark, so the element-wise min
+    over per-shard copies IS the sequential update), and the settled
+    mask / any / overflow flags through ``pmax``. Ownership is disjoint
+    and min/max are associative-commutative, so the result is bitwise
+    the single-device ``fused`` iteration for any shard count."""
+
+    supports_fused_light = True
+
+    kernel: bool = _static()
+    interpret: bool = _static()
+
+    @property
+    def supports_vmap(self):
+        return not self.kernel
+
+    @classmethod
+    def build(cls, graph: COOGraph, cfg) -> "ShardedFusedBackend":
+        shards = resolve_n_shards(cfg.n_shards)
+        part = partition_ell(graph, shards, cfg.delta)
+        cap = min(cfg.frontier_cap or part.shard_nodes, part.shard_nodes)
+        return cls(part, cfg.delta, graph.n_nodes, shards, cap,
+                   graph_is_canonical(graph), _kernel_viable(cfg),
+                   cfg.interpret)
+
+    def fused_iter(self, tent, explored, in_s, bucket_i, *, packed: bool):
+        part = self.part
+        n, s_nodes, cap = self.n, part.shard_nodes, self.cap
+        delta, canonical = self.delta, self.canonical
+        kernel, interpret = self.kernel, self.interpret
+        n_pad = self.n_shards * s_nodes
+
+        def body(tent_r, explored_r, in_s_r, i_r, nbr_s, w_s):
+            nbr_s, w_s = nbr_s[0], w_s[0]         # (S + 1, D)
+            base = lax.axis_index(_SHARD_AXIS) * s_nodes
+            d = dist_of(tent_r, packed)
+            dp = jnp.pad(d, (0, n_pad - n), constant_values=INF32)
+            ep = jnp.pad(explored_r, (0, n_pad - n), constant_values=INF32)
+            d_loc = lax.dynamic_slice_in_dim(dp, base, s_nodes)
+            e_loc = lax.dynamic_slice_in_dim(ep, base, s_nodes)
+            fidx, rows_n, rows_w, count, any_l, _ = frontier_relax(
+                d_loc, e_loc, i_r, nbr_s, w_s, delta=delta, cap=cap,
+                base=base, sent=n, backend="pallas" if kernel else "ref",
+                interpret=interpret)
+            d_f = jnp.take(d, fidx, mode="fill", fill_value=INF32)
+            explored_out = lax.pmin(
+                explored_r.at[fidx].set(d_f, mode="drop"), _SHARD_AXIS)
+            in_s_out = lax.pmax(
+                in_s_r.at[fidx].set(True, mode="drop").astype(jnp.int32),
+                _SHARD_AXIS) > 0
+            words = ell_relax_words(tent_r, fidx, rows_n, rows_w, n=n,
+                                    packed=packed, canonical=canonical)
+            buf = jnp.full((n,), _inf_word(packed)).at[rows_n.ravel()].min(
+                words.ravel(), mode="drop")
+            tent_out = jnp.minimum(tent_r, lax.pmin(buf, _SHARD_AXIS))
+            any_all = lax.pmax(any_l.astype(jnp.int32), _SHARD_AXIS) > 0
+            over = (count > cap).astype(jnp.int32)
+            over_all = lax.pmax(over, _SHARD_AXIS) > 0
+            return tent_out, explored_out, in_s_out, any_all, over_all
+
+        rep, spec = PartitionSpec(), PartitionSpec(_SHARD_AXIS)
+        fn = compat.shard_map(
+            body, mesh=self._mesh(),
+            in_specs=(rep, rep, rep, rep, spec, spec),
+            out_specs=(rep, rep, rep, rep, rep),
+            check_vma=False)       # no replication rule for pallas_call
+        return fn(tent, explored, in_s, jnp.asarray(bucket_i, jnp.int32),
+                  part.light_nbr, part.light_w)
+
+    def fused_next(self, dist, explored, bucket_i):
+        """Replicated next-bucket min: the post-heavy scan runs on the
+        already-merged tent, so the plain jnp scan is both cheapest and
+        trivially bitwise (same formulas as the kernel output)."""
+        return scan_bucket(dist, explored, bucket_i, delta=self.delta)[2]
+
+
 def make_backend(graph: COOGraph, cfg, free_mask=None) -> RelaxBackend:
     """Route a (graph, config) pair to its backend. ``free_mask`` marks
     the game-map graph class: under ``strategy='pallas'`` it selects the
@@ -584,10 +776,14 @@ def make_backend(graph: COOGraph, cfg, free_mask=None) -> RelaxBackend:
         return EdgeBackend.build(graph, cfg)
     if cfg.strategy == "ell":
         return EllBackend.build(graph, cfg)
+    if cfg.strategy == "fused":
+        return FusedBackend.build(graph, cfg)
     if cfg.strategy == "sharded_edge":
         return ShardedEdgeBackend.build(graph, cfg)
     if cfg.strategy == "sharded_ell":
         return ShardedEllBackend.build(graph, cfg)
+    if cfg.strategy == "sharded_fused":
+        return ShardedFusedBackend.build(graph, cfg)
     assert cfg.strategy == "pallas", cfg.strategy
     if free_mask is not None:
         if cfg.pred_mode == "packed":

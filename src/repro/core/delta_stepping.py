@@ -63,17 +63,21 @@ class DeltaConfig:
     """Configuration of the Δ-stepping engine.
 
     delta        — bucket width Δ (paper's tuning parameter, Fig. 1).
-    strategy     — 'edge' | 'ell' | 'pallas' | 'sharded_edge' |
-                   'sharded_ell' relaxation backend (see module doc /
-                   DESIGN.md §3, §9).
+    strategy     — 'edge' | 'ell' | 'pallas' | 'fused' | 'sharded_edge'
+                   | 'sharded_ell' | 'sharded_fused' relaxation backend
+                   (see module doc / DESIGN.md §3, §9, §12).
     pred_mode    — 'none' | 'argmin' | 'packed' predecessor tracking.
-    frontier_cap — 'ell'/'pallas' only: static capacity of the compacted
-                   frontier (defaults to |V|; smaller saves work if an
-                   upper bound on per-bucket frontier size is known —
-                   the ``overflow`` result flag reports violations).
-                   For 'sharded_ell' the cap is *per shard* (defaults to
+    frontier_cap — ELL-family ('ell'/'pallas'/'fused') only: static
+                   capacity of the compacted frontier (defaults to |V|;
+                   smaller saves work if an upper bound on per-bucket
+                   frontier size is known — the ``overflow`` result
+                   flag reports violations). For 'sharded_ell' /
+                   'sharded_fused' the cap is *per shard* (defaults to
                    the owned vertex range, which cannot overflow).
-    interpret    — 'pallas' only: run kernels in interpret mode (CPU).
+    interpret    — 'pallas'/'fused' only: run kernels in interpret mode
+                   (CPU; for 'fused' this is also what opts the build
+                   into the kernel path off-TPU — see backends
+                   ``_kernel_viable``).
     grid_costs   — 'pallas' on game maps: (straight, diagonal) move
                    costs of the occupancy-grid stencil (paper §4).
     n_shards     — 'sharded_*' only: width of the 1-D device mesh the
@@ -90,8 +94,9 @@ class DeltaConfig:
     n_shards: Optional[int] = None
 
     def __post_init__(self):
-        if self.strategy not in ("edge", "ell", "pallas",
-                                 "sharded_edge", "sharded_ell"):
+        if self.strategy not in ("edge", "ell", "pallas", "fused",
+                                 "sharded_edge", "sharded_ell",
+                                 "sharded_fused"):
             raise ValueError(f"unknown strategy {self.strategy!r}")
         if self.pred_mode not in ("none", "argmin", "packed"):
             raise ValueError(f"unknown pred_mode {self.pred_mode!r}")
@@ -239,13 +244,47 @@ def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool,
             cond, body, (tent, explored, in_s0, inner, over, f0, go0))
         return tent, explored, in_s, inner, over
 
+    # fused light phase (DESIGN.md §12): backends implementing the
+    # fused protocol run scan + compaction + row gather as ONE step
+    # (``fused_iter``), so the loop needs no full-width frontier mask in
+    # its carry at all. The classic loop primes with a scan and re-scans
+    # inside the body; here each iteration is scan-then-relax *atomic*,
+    # which appends exactly one vacuous trailing iteration (the scan
+    # that finds the bucket empty; all its updates are sentinel no-ops).
+    # Counting ``inner += any`` instead of ``inner += 1`` makes the
+    # counters — and the whole state trajectory — bitwise those of the
+    # classic loop (same op sequence on the same states).
+    fused = getattr(backend, "supports_fused_light", False)
+
+    def light_phase_fused(tent, explored, i, inner, over):
+        in_s0 = jnp.zeros((n,), bool)
+
+        def cond(c):
+            return c[5]
+
+        def body(c):
+            tent, explored, in_s, inner, over, _ = c
+            tent, explored, in_s, any_, o = backend.fused_iter(
+                tent, explored, in_s, i, packed=packed)
+            return (tent, explored, in_s, inner + any_.astype(jnp.int32),
+                    over | o, any_)
+
+        tent, explored, in_s, inner, over, _ = lax.while_loop(
+            cond, body,
+            (tent, explored, in_s0, inner, over, jnp.ones((), bool)))
+        return tent, explored, in_s, inner, over
+
     def outer_body(c):
         tent, explored, i, outer, inner, over = c
-        tent, explored, in_s, inner, over = light_phase(
+        phase = light_phase_fused if fused else light_phase
+        tent, explored, in_s, inner, over = phase(
             tent, explored, i, inner, over)
         # heavy pass from S (paper Alg. 1 lines 19-20)
         tent, o = backend.sweep(tent, in_s, i, light=False, packed=packed)
-        _, _, nxt = scan(tent, explored, i)
+        if fused:
+            nxt = backend.fused_next(_dist_of(tent, packed), explored, i)
+        else:
+            _, _, nxt = scan(tent, explored, i)
         return (tent, explored, nxt, outer + 1, inner, over | o)
 
     def outer_cond(c):

@@ -1,0 +1,4 @@
+from repro.kernels.frontier_relax.ops import frontier_relax
+from repro.kernels.frontier_relax.ref import frontier_relax_ref
+
+__all__ = ["frontier_relax", "frontier_relax_ref"]

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: fused frontier scan + compaction + ELL row gather.
+
+The paper's bucket-fusion deviation taken one step further (DESIGN.md
+§12): the ``bucket_scan`` pass (frontier mask / any-reduce / next-bucket
+min), the frontier compaction (``jnp.nonzero``) and the ELL row gather
+of ``ell_sweep`` are three separate XLA ops in the ``ell`` strategy —
+three full passes over HBM-resident arrays per inner iteration. This
+kernel runs all of them in ONE ``pallas_call`` over a VMEM-resident
+tent/explored slice:
+
+  phase A (vector): frontier flags of bucket ``i`` restricted to
+      unsettled vertices (``dist < explored``), their any-reduce, and
+      the next-bucket minimum — the exact ``scan_bucket`` formulas, so
+      the scalar outputs are bitwise those of the jnp twin;
+  phase B (scalar loop): ascending-order compaction of the flag vector
+      into an SMEM index buffer of static capacity ``cap`` — the same
+      first-``cap`` truncation order as ``jnp.nonzero(size=cap)``, so
+      the compacted buffer is bitwise the ``_FrontierCompactMixin``
+      one. The *total* population is counted past the cap (the
+      overflow signal);
+  phase C (scalar loop): per-slot dynamic DMA of the compacted rows
+      out of the resident ELL neighbor/weight blocks; empty slots read
+      the all-sentinel row ``n_rows`` (INF weights — the 'benign
+      garbage' idiom every consumer already handles).
+
+The kernel stays int32-distance-only like ``ell_relax``: packing and
+the C4 filter happen in XLA on the gathered rows (the shared
+``ell_relax_words`` path), which is what keeps ``fused`` bitwise
+interchangeable with ``edge``/``ell`` for packed (cost, pred) words.
+
+Layout: dist/explored arrive as a padded (R, 128) lane reshape
+(padding = INF, so padded slots can neither enter the frontier nor the
+next-bucket min); the ELL blocks are fully VMEM-resident, sized for the
+sub-million-vertex slices this engine shards at (the ops wrapper is
+where a multi-block grid would slot in). ``base`` lifts slice-local
+compacted indices to global vertex ids for the sharded variant; the
+global padding sentinel is ``sent``. grid=(1,): with every input
+resident there is nothing to pipeline, and a single step keeps the
+scalar-accumulation idiom of ``bucket_scan`` trivially race-free.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.graphs.structures import INF32
+
+_INF = int(INF32)  # python int: pallas kernels cannot capture traced constants
+_IMAX = 2**31 - 1
+_LANE = 128
+
+
+def frontier_relax_kernel(i_ref, base_ref, dist_ref, explored_ref, nbr_ref,
+                          w_ref, fidx_ref, rows_n_ref, rows_w_ref, count_ref,
+                          any_ref, next_ref, idx_smem, cnt_smem, *,
+                          delta: int, cap: int, n_rows: int, sent: int):
+    i = i_ref[0, 0]
+    base = base_ref[0, 0]
+
+    # -- phase A: the scan_bucket formulas on the resident lane layout --
+    t = dist_ref[...]                       # (R, 128), padding = INF
+    e = explored_ref[...]
+    fin = t < _INF
+    b = jnp.where(fin, t // delta, _IMAX)
+    f = fin & (b == i) & (t < e)
+    any_ref[0, 0] = f.any().astype(jnp.int32)
+    nb = jnp.where((b > i) & (t < e), b, _IMAX).min()
+    next_ref[0, 0] = nb.astype(jnp.int32)
+
+    # -- phase B: ascending compaction into SMEM (jnp.nonzero order) --
+    cnt_smem[0] = jnp.int32(0)
+    flat = f.reshape(-1)
+
+    def compact_body(k, carry):
+        def hit():
+            pos = cnt_smem[0]
+
+            @pl.when(pos < cap)
+            def _():
+                idx_smem[pos] = jnp.int32(k)
+
+            cnt_smem[0] = pos + 1           # count past cap: overflow signal
+
+        pl.when(flat[k])(hit)
+        return carry
+
+    jax.lax.fori_loop(0, flat.shape[0], compact_body, 0)
+    total = cnt_smem[0]
+    count_ref[0, 0] = total
+
+    # -- phase C: dynamic row gather of the compacted frontier --
+    def gather_body(j, carry):
+        lidx = jnp.where(j < total, idx_smem[j], jnp.int32(n_rows))
+        lidx = jnp.minimum(lidx, jnp.int32(n_rows))   # all-sentinel row
+        gidx = jnp.where(lidx < n_rows, lidx + base, jnp.int32(sent))
+        fidx_ref[j, 0] = gidx.astype(jnp.int32)
+        rows_n_ref[pl.ds(j, 1), :] = nbr_ref[pl.ds(lidx, 1), :]
+        rows_w_ref[pl.ds(j, 1), :] = w_ref[pl.ds(lidx, 1), :]
+        return carry
+
+    jax.lax.fori_loop(0, cap, gather_body, 0)
+
+
+def frontier_relax_pallas(dist2d, explored2d, bucket_i, base, nbr, w_ell, *,
+                          delta: int, cap: int, n_rows: int, sent: int,
+                          interpret: bool = False):
+    """dist2d/explored2d: int32[R, 128] padded lane reshape of the tent
+    slice (padding = INF); nbr/w_ell: int32[n_rows + 1, D] resident ELL
+    block (row ``n_rows`` all-sentinel). Returns ``(fidx int32[cap, 1],
+    rows_n int32[cap, D], rows_w int32[cap, D], count int32[1, 1],
+    any int32[1, 1], next int32[1, 1])``."""
+    r, lanes = dist2d.shape
+    assert lanes == _LANE
+    d = w_ell.shape[1]
+    i_arr = jnp.full((1, 1), bucket_i, jnp.int32)
+    base_arr = jnp.full((1, 1), base, jnp.int32)
+    kernel = functools.partial(frontier_relax_kernel, delta=delta, cap=cap,
+                               n_rows=n_rows, sent=sent)
+    full = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[full((1, 1)), full((1, 1)), full((r, lanes)),
+                  full((r, lanes)), full(nbr.shape), full(w_ell.shape)],
+        out_specs=[full((cap, 1)), full((cap, d)), full((cap, d)),
+                   full((1, 1)), full((1, 1)), full((1, 1))],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap, 1), jnp.int32),
+            jax.ShapeDtypeStruct((cap, d), jnp.int32),
+            jax.ShapeDtypeStruct((cap, d), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((cap,), jnp.int32),
+                        pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(i_arr, base_arr, dist2d, explored2d, nbr, w_ell)

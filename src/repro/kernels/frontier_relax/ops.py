@@ -1,0 +1,44 @@
+"""Wrapper for frontier_relax: pads the tent slice into (R, 128) lanes,
+dispatches kernel or oracle, flattens/reshapes the outputs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.graphs.structures import INF32
+from repro.kernels.frontier_relax.frontier_relax import frontier_relax_pallas
+from repro.kernels.frontier_relax.ref import frontier_relax_ref
+
+_LANE = 128
+_BLOCK_ROWS = 8
+
+
+def frontier_relax(dist, explored, bucket_i, nbr, w_ell, *, delta: int,
+                   cap: int, base=0, sent=None, backend: str = "pallas",
+                   interpret: bool = False):
+    """Fused frontier scan + compaction + ELL row gather of one bucket.
+
+    dist/explored: int32[S] (the whole tent, or one shard's owned
+    slice); nbr/w_ell: int32[S + 1, D] ELL adjacency block (row S
+    all-sentinel). Returns ``(fidx int32[cap], rows_n int32[cap, D],
+    rows_w int32[cap, D], count int32, any bool, next int32)`` with
+    ``fidx`` in global ids (``base`` + local index; padding slots carry
+    the global sentinel ``sent``, default S). ``count`` is the full
+    bucket population — ``count > cap`` is the caller's overflow flag.
+
+    A zero-width ELL block (D == 0: no edges on this side of the
+    light/heavy split) routes to the jnp oracle — zero-size Pallas
+    blocks have no TPU layout, and there is nothing to gather anyway."""
+    s = dist.shape[0]
+    sent = s if sent is None else sent
+    if backend == "ref" or w_ell.shape[1] == 0:
+        return frontier_relax_ref(dist, explored, bucket_i, nbr, w_ell,
+                                  delta=delta, cap=cap, base=base, sent=sent)
+    per = _LANE * _BLOCK_ROWS
+    pad = -(-s // per) * per - s
+    d2 = jnp.pad(dist, (0, pad), constant_values=INF32).reshape(-1, _LANE)
+    e2 = jnp.pad(explored, (0, pad), constant_values=INF32).reshape(-1, _LANE)
+    fidx, rows_n, rows_w, count, any_, nxt = frontier_relax_pallas(
+        d2, e2, bucket_i, base, nbr, w_ell, delta=delta, cap=cap,
+        n_rows=s, sent=sent, interpret=interpret)
+    return (fidx[:, 0], rows_n, rows_w, count[0, 0], any_[0, 0] > 0,
+            nxt[0, 0])

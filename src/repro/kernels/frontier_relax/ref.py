@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for frontier_relax: the three fused phases as the
+separate XLA ops they replace, composed bitwise-identically."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.graphs.structures import INF32
+
+_INF = jnp.int32(INF32)
+_IMAX = jnp.int32(2**31 - 1)
+
+
+def frontier_relax_ref(dist, explored, bucket_i, nbr, w_ell, *, delta: int,
+                       cap: int, base=0, sent=None):
+    """dist/explored: int32[S] (a tent slice); nbr/w_ell: int32[S+1, D]
+    ELL block with all-sentinel row S. Returns ``(fidx int32[cap],
+    rows_n int32[cap, D], rows_w int32[cap, D], count int32, any bool,
+    next int32)`` — ``fidx`` carries *global* ids (``base`` + local,
+    padding sentinel ``sent``; default ``S``), exactly the layout
+    ``ell_relax_words`` consumes.
+
+    Compaction is ``jnp.nonzero(size=cap)``: ascending local order,
+    truncated at ``cap``; ``count`` is the untruncated frontier
+    population, so ``count > cap`` is the overflow signal."""
+    s = dist.shape[0]
+    sent = s if sent is None else sent
+    fin = dist < _INF
+    b = jnp.where(fin, dist // delta, _IMAX)
+    f = fin & (b == bucket_i) & (dist < explored)
+    nxt = jnp.where((b > bucket_i) & (dist < explored), b, _IMAX).min()
+    lidx = jnp.nonzero(f, size=cap, fill_value=s)[0].astype(jnp.int32)
+    fidx = jnp.where(lidx < s, lidx + jnp.int32(base),
+                     jnp.int32(sent)).astype(jnp.int32)
+    rows_n = nbr[lidx]                      # row s is all-sentinel
+    rows_w = w_ell[lidx]
+    return (fidx, rows_n, rows_w, f.sum().astype(jnp.int32), f.any(),
+            nxt.astype(jnp.int32))

@@ -111,7 +111,8 @@ def main():
     ap.add_argument("--degree", type=int, default=12)
     ap.add_argument("--delta", type=int, default=10)
     ap.add_argument("--strategy", default="edge",
-                    choices=["edge", "ell", "sharded_edge", "sharded_ell"],
+                    choices=["edge", "ell", "fused", "sharded_edge",
+                             "sharded_ell", "sharded_fused"],
                     help="SSSP mode: relaxation backend (sharded_* = "
                          "mesh-sharded engine, DESIGN.md §9)")
     ap.add_argument("--shards", type=int, default=None,

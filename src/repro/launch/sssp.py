@@ -46,8 +46,9 @@ def main():
     ap.add_argument("--p", type=float, default=1e-2)
     ap.add_argument("--delta", type=int, default=10)
     ap.add_argument("--strategy", default="edge",
-                    choices=["edge", "ell", "pallas",
-                             "sharded_edge", "sharded_ell"])
+                    choices=["edge", "ell", "pallas", "fused",
+                             "sharded_edge", "sharded_ell",
+                             "sharded_fused"])
     ap.add_argument("--shards", type=int, default=None,
                     help="sharded_* strategies: 1-D mesh width "
                          "(default: every local device)")

@@ -145,7 +145,7 @@ def fingerprint(stats: GraphStats) -> str:
     hist = ",".join(str(c) for c in stats.degree_hist)
     ecc = 0 if stats.ecc0 == 0 else 1 + int(np.log2(stats.ecc0))
     return (
-        f"v3:n={stats.n_nodes}:m={stats.n_edges}"
+        f"v4:n={stats.n_nodes}:m={stats.n_edges}"
         f":deg={hist}:w={stats.w_min}-{stats.w_max}:ecc={ecc}"
         f":dev={jax.device_count()}"
     )

@@ -140,8 +140,15 @@ def default_strategies() -> Tuple[str, ...]:
     import jax
 
     if jax.device_count() > 1:
-        return ("edge", "ell", "sharded_edge", "sharded_ell")
-    return ("edge", "ell")
+        return (
+            "edge",
+            "ell",
+            "fused",
+            "sharded_edge",
+            "sharded_ell",
+            "sharded_fused",
+        )
+    return ("edge", "ell", "fused")
 
 
 def candidate_configs(
@@ -165,7 +172,7 @@ def candidate_configs(
     out = []
     for delta in deltas:
         for strat in strategies:
-            if strat in ("ell", "pallas"):
+            if strat in ("ell", "pallas", "fused"):
                 for frac in cap_fractions:
                     cap = None if frac >= 1.0 else max(_MIN_CAP, int(n * frac))
                     out.append((delta, strat, cap))

@@ -10,6 +10,13 @@ them.
 """
 import numpy as np
 
+# Every RelaxBackend strategy the engine exposes, in registration order —
+# the single source of truth for "the full differential matrix". The
+# differential suite consumes this tuple so a newly added backend cannot
+# silently stay out of the oracle cross product.
+ALL_STRATEGIES = ("edge", "ell", "pallas", "fused",
+                  "sharded_edge", "sharded_ell", "sharded_fused")
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True

@@ -23,7 +23,7 @@ from functools import partial
 import jax.numpy as jnp
 import numpy as np
 
-from _property_driver import drive, null_ctx as _null
+from _property_driver import ALL_STRATEGIES, drive, null_ctx as _null
 from test_differential import adversarial_coo
 from repro.api import (
     BoundedRadius,
@@ -50,7 +50,7 @@ drive_seed = partial(
     strategy=lambda st: st.integers(min_value=0, max_value=2**31 - 1),
     fallback_draw=lambda rng: int(rng.integers(0, 2**31)))
 
-BACKENDS = ("edge", "ell", "pallas", "sharded_edge", "sharded_ell")
+BACKENDS = ALL_STRATEGIES
 
 
 def _seed_solve(g, source, cfg):

@@ -21,7 +21,7 @@ from functools import partial
 
 import numpy as np
 
-from _property_driver import drive, null_ctx as _null
+from _property_driver import ALL_STRATEGIES, drive, null_ctx as _null
 from repro.compat import enable_x64
 from repro.core import (
     DeltaConfig,
@@ -42,7 +42,7 @@ drive_seed = partial(
 # arrays are arguments — so each backend × pred × Δ program compiles once.
 N, M = 32, 96
 
-BACKENDS = ("edge", "ell", "pallas", "sharded_edge", "sharded_ell")
+BACKENDS = ALL_STRATEGIES
 PRED_MODES = ("none", "argmin", "packed")
 DELTAS = (1, 7, 31)
 
@@ -144,7 +144,8 @@ def test_empty_graph_every_backend():
     """M=0 edge case (separate shape): only the source is reachable."""
     z = np.zeros((0,), np.int32)
     g = COOGraph(src=z, dst=z, w=z, n_nodes=5)
-    for strategy in ("edge", "ell", "sharded_edge", "sharded_ell"):
+    for strategy in ("edge", "ell", "fused", "sharded_edge", "sharded_ell",
+                     "sharded_fused"):
         res = _solve(g, 2, strategy, "argmin", 7)
         dist = np.asarray(res.dist, np.int64)
         assert dist[2] == 0

@@ -17,7 +17,7 @@ microbatches, and the tuning-record reuse across in-range cost churn.
 import numpy as np
 import pytest
 
-from _property_driver import null_ctx
+from _property_driver import ALL_STRATEGIES, null_ctx
 from repro.api import Engine, MultiSource, SingleSource, UpdateBatch
 from repro.compat import enable_x64
 from repro.core import DeltaConfig, dijkstra, walk_pred_tree
@@ -26,7 +26,7 @@ from repro.dynamic.repair import Resident
 from repro.graphs import square_lattice, watts_strogatz
 from repro.graphs.structures import COOGraph, INF32
 
-BACKENDS = ("edge", "ell", "pallas", "sharded_edge", "sharded_ell")
+BACKENDS = ALL_STRATEGIES
 
 _INF = int(INF32)
 
