@@ -71,8 +71,9 @@ def main():
         f"pairs={pairs};tile=8;pairs_per_s={pairs / t_mm:.0f}")
 
     # tuner-resolved plan (measured search; informational only)
-    rec_plan = Engine(g, DeltaConfig(pred_mode="none"), tune=True).plan(
-        sources=(0,))
+    from repro.api import Tuning
+    rec_plan = Engine(g, DeltaConfig(pred_mode="none"),
+                      tuning=Tuning(measure=True)).plan(sources=(0,))
     rec = rec_plan.record
     t_tuned = time_fn(lambda: rec_plan.solve(SingleSource(0)).dist)
     row("queries/smallworld/tuned_plan", t_tuned,

@@ -39,6 +39,7 @@ def main(argv=None) -> int:
         bench_rmat,
         bench_scaling,
         bench_scaling_shards,
+        bench_serving,
         bench_sharded,
         bench_smallworld,
     )
@@ -48,7 +49,7 @@ def main(argv=None) -> int:
     for mod in (bench_smallworld, bench_delta_sweep, bench_scaling,
                 bench_preprocess, bench_rmat, bench_gamemap,
                 bench_multisource, bench_sharded, bench_scaling_shards,
-                bench_queries, bench_dynamic):
+                bench_queries, bench_dynamic, bench_serving):
         modules[mod.__name__.rsplit(".", 1)[-1].removeprefix("bench_")] = mod
     if args.only is not None:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -73,18 +73,19 @@ mm = plan.solve(ManyToMany(sources=[0, 1, 2], targets=[10, 20, 30],
 assert np.array_equal(mm.matrix[0], ref[[10, 20, 30]])
 print(f"many-to-many: {mm.matrix.shape} matrix via tiled solves ✓")
 
-# auto-tuning: config="auto" picks Δ from graph statistics (the paper's
+# auto-tuning: tuning="auto" picks Δ from graph statistics (the paper's
 # hand-swept Fig. 1 knob, estimated as Δ ≈ c·w̄/d̄ with zero
 # measurement). The TuningRecord attaches to the plan. Answers never
 # change — only time does.
-auto_plan = Engine(g, "auto").plan()
+auto_plan = Engine(g, tuning="auto").plan()
 res_auto = auto_plan.solve(SingleSource(0))
 assert np.array_equal(np.asarray(res_auto.dist), dist)
-print(f"config='auto': Δ={auto_plan.config.delta} "
+print(f"tuning='auto': Δ={auto_plan.config.delta} "
       f"({auto_plan.config.strategy}), same distances ✓")
-# tune_cache="tuning.json" reuses records a measured search persisted —
-# run `python -m repro.launch.sssp --tune --tune-cache tuning.json`
-# (repro.tune.tune) once to populate it; "auto" alone never measures.
+# tuning=Tuning(cache="tuning.json") reuses records a measured search
+# (tuning=Tuning(measure=True)) persisted — run
+# `python -m repro.launch.sssp --tune --tune-cache tuning.json` once to
+# populate it; "auto" alone never measures.
 
 # mesh-sharded backend (DESIGN.md §9): relaxation partitioned over every
 # local device under shard_map, tentative distances merged with an
@@ -120,3 +121,22 @@ print(f"dynamic update of {ids.size} edges: warm re-solve repaired "
       f"{warm.telemetry.repaired} vertices over "
       f"{int(warm.telemetry.buckets)} buckets "
       f"(cold solve: {int(res.telemetry.buckets)}) ✓")
+
+# async serving tier (repro.serve.Server, DESIGN.md §13): submit()
+# returns a future-style Ticket; the batch former packs consecutive
+# lane-able queries into one padded multi-source solve, so every answer
+# is bitwise what a serial plan.solve stream would give. UpdateBatch
+# rides the same submit path and applies between microbatches.
+from repro.serve import Server
+
+with Server(g, config=DeltaConfig(delta=10, pred_mode="argmin"),
+            lane_width=4) as srv:
+    tickets = [srv.submit(SingleSource(s)) for s in (0, 1, 2)]
+    hop = srv.submit(PointToPoint(0, 42))
+    assert np.array_equal(np.asarray(tickets[0].result().dist), dist)
+    assert hop.result().distance == int(dist[42])
+stats = srv.stats()
+print(f"serving tier: {stats['completed']} queries in "
+      f"{sum(stats['batches'].values())} microbatches "
+      f"(occupancy {stats['mean_occupancy']:.2f}, "
+      f"p50 {stats['latency_p50_ms']:.0f} ms) ✓")

@@ -3,7 +3,7 @@
 
     from repro.api import Engine, SingleSource, PointToPoint, UpdateBatch
 
-    plan = Engine(graph, config="auto").plan()
+    plan = Engine(graph, tuning="auto").plan()
     full = plan.solve(SingleSource(0))           # dist/pred + telemetry
     hop = plan.solve(PointToPoint(0, 42))        # early-exit distance+path
     plan.update(edge_ids, new_weights)           # dynamic edge costs ...
@@ -19,7 +19,7 @@ other plan of the same shape. The pre-façade entry points —
 package with bitwise-identical results.
 """
 
-from repro.api.engine import Engine, Plan
+from repro.api.engine import Engine, Plan, Tuning, UpdateRefused
 from repro.api.paths import extract_path
 from repro.api.queries import (
     BoundedRadius,
@@ -54,6 +54,8 @@ __all__ = [
     "SingleSource",
     "SingleSourceResult",
     "Telemetry",
+    "Tuning",
     "UpdateBatch",
+    "UpdateRefused",
     "extract_path",
 ]

@@ -1,23 +1,26 @@
 """The Query/Plan façade — the one public entry point of the engine.
 
-``Engine(graph, config="auto").plan()`` resolves tuning / strategy /
-caps exactly once and returns a ``Plan`` holding the pre-lowered jitted
-drivers (the module-level jitted programs of ``core.delta_stepping``,
-so plans over same-shaped graphs share compile cache entries exactly
-like the deprecated ``DeltaSteppingSolver`` did); ``plan.solve(query)``
+``Engine(graph).plan()`` resolves tuning / strategy / caps exactly once
+and returns a ``Plan`` holding the pre-lowered jitted drivers (the
+module-level jitted programs of ``core.delta_stepping``, so plans over
+same-shaped graphs share compile cache entries exactly like the
+deprecated ``DeltaSteppingSolver`` did); ``plan.solve(query)``
 dispatches on the small query algebra of ``queries.py``.
 
-Resolution (DESIGN.md §7/§10) happens in one place, ``Engine.plan``:
+Resolution (DESIGN.md §7/§10) happens in one place, ``Engine.plan``,
+steered by the one ``tuning=`` knob:
 
-* a concrete ``DeltaConfig`` with no tuning inputs is used as-is;
-* ``config="auto"`` — or a concrete config plus ``tune=True`` /
-  ``tune_cache=...`` acting as the tuning *base* — goes through
+* a concrete ``DeltaConfig`` with ``tuning=None`` is used as-is;
+* ``tuning="auto"`` / ``"measure"`` / a cache path / a ``Tuning(...)``
+  — with any concrete config acting as the tuning *base* — goes through
   ``tune.resolve_record``, whose cap validation runs on the one shared
   ``build_safe_solver`` path: a tuning-chosen ``frontier_cap`` is
   re-validated against ``plan(sources=...)`` (and dropped on overflow)
   or dropped outright when the plan cannot know its future sources.
   The winning ``TuningRecord`` attaches to the plan (``plan.record``) —
-  a Plan is the unit tuning evidence hangs off.
+  a Plan is the unit tuning evidence hangs off. The pre-redesign
+  spellings (``config="auto"``, ``tune=``, ``tune_cache=``) are
+  deprecated shims onto exactly these semantics.
 
 Overflow handling has one fallback point, ``Plan.solve``: with
 ``fallback=True`` (the serving configuration) a query whose solve trips
@@ -40,6 +43,7 @@ query-algebra packaging of the same pair.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Optional, Sequence, Union
 
@@ -79,6 +83,62 @@ from repro.core.delta_stepping import (
 )
 from repro.dynamic import Resident, apply_weight_update, plan_repair
 from repro.graphs.structures import COOGraph, INF32
+
+
+class UpdateRefused(ValueError):
+    """Structured refusal of a dynamic update the plan cannot apply.
+
+    ``reason`` is a stable machine-readable tag (currently
+    ``"grid_costs"``: grid-stencil plans take their costs from
+    ``DeltaConfig.grid_costs``, not the COO weight array). The serving
+    tier keys on it to shed the offending request per-ticket instead of
+    treating the refusal as a batch-loop failure; direct callers still
+    get an ordinary ``ValueError`` (this is a subclass).
+
+    >>> try:
+    ...     raise UpdateRefused("no", reason="grid_costs")
+    ... except ValueError as e:
+    ...     e.reason
+    'grid_costs'
+    """
+
+    def __init__(self, message: str, *, reason: str):
+        super().__init__(message)
+        self.reason = reason
+
+
+@dataclasses.dataclass(frozen=True)
+class Tuning:
+    """The one tuning knob of ``Engine``: how the operating point is
+    resolved. ``measure=True`` runs the successive-halving measured
+    search (DESIGN.md §7); ``cache`` names the persistent fingerprint-
+    keyed record store consulted first (and, for measured searches,
+    written back). ``Tuning()`` — no measurement, no cache — is the
+    zero-measurement estimator, spelled ``tuning="auto"`` for short;
+    ``tuning="measure"`` is ``Tuning(measure=True)``; any other string
+    is taken as a cache path.
+
+    >>> Tuning(measure=True, cache="tuning.json").measure
+    True
+    """
+
+    measure: bool = False
+    cache: Optional[str] = None
+
+
+def _normalize_tuning(tuning) -> Optional[Tuning]:
+    if tuning is None or isinstance(tuning, Tuning):
+        return tuning
+    if isinstance(tuning, str):
+        if tuning == "auto":
+            return Tuning()
+        if tuning == "measure":
+            return Tuning(measure=True)
+        return Tuning(cache=tuning)
+    raise ValueError(
+        "tuning must be None, 'auto', 'measure', a cache path or a "
+        f"Tuning(...), got {tuning!r}"
+    )
 
 
 def _mark_fallback(res: Result) -> Result:
@@ -213,10 +273,11 @@ class Plan:
         *range*, so in-range cost churn reuses the record
         (tests/test_dynamic.py asserts this)."""
         if self.free_mask is not None and self.config.strategy == "pallas":
-            raise ValueError(
+            raise UpdateRefused(
                 "grid-stencil (game-map) plans take their costs from "
                 "DeltaConfig.grid_costs, not the COO weight array — "
-                "edge-weight updates do not apply to them"
+                "edge-weight updates do not apply to them",
+                reason="grid_costs",
             )
         self.graph = apply_weight_update(self.graph, edge_ids, new_weights)
         self.backend = self._rebuild_backend()
@@ -507,10 +568,15 @@ class Plan:
 
 class Engine:
     """Façade entry point: holds the graph plus the tuning inputs, and
-    mints ``Plan``s. ``config`` is a concrete ``DeltaConfig`` or
-    ``"auto"``; with ``tune=True`` (measured search) or ``tune_cache``
-    (persistent record store) a concrete config survives as the tuning
-    *base* — its non-searched fields carry into the resolved plan.
+    mints ``Plan``s. ``config`` is a concrete ``DeltaConfig`` (used
+    as-is, or as the tuning *base* — its non-searched fields carry into
+    the resolved plan) or ``None``; ``tuning`` is the one resolution
+    knob: ``None`` (concrete config as-is), ``"auto"`` (zero-measurement
+    estimator), ``"measure"`` (measured search), a cache path, or a
+    ``Tuning(measure=..., cache=...)``. ``Engine(graph)`` with neither
+    defaults to ``tuning="auto"``. The pre-redesign spellings —
+    ``config="auto"``, ``tune=True``, ``tune_cache=path`` — survive as
+    deprecated shims mapping onto exactly those semantics.
 
     >>> import jax.numpy as jnp
     >>> from repro.api import Engine, PointToPoint
@@ -528,22 +594,43 @@ class Engine:
     def __init__(
         self,
         graph: COOGraph,
-        config: Union[DeltaConfig, str] = "auto",
+        config: Union[DeltaConfig, str, None] = None,
         *,
         free_mask=None,
+        tuning: Union[Tuning, str, None] = None,
         tune: bool = False,
         tune_cache: Optional[str] = None,
     ):
-        if isinstance(config, str) and config != "auto":
-            raise ValueError(
-                f"unknown config string {config!r} (did you mean 'auto' "
-                "or a DeltaConfig?)"
+        if isinstance(config, str):
+            if config != "auto":
+                raise ValueError(
+                    f"unknown config string {config!r} (did you mean "
+                    "'auto' or a DeltaConfig?)"
+                )
+            warnings.warn(
+                "config='auto' is deprecated: use Engine(graph, "
+                "tuning='auto') (or just Engine(graph))",
+                DeprecationWarning,
+                stacklevel=2,
             )
+            config = None
+            if tuning is None and not (tune or tune_cache is not None):
+                tuning = "auto"
+        if tune or tune_cache is not None:
+            warnings.warn(
+                "tune=/tune_cache= are deprecated: use tuning="
+                "Tuning(measure=..., cache=...)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if tuning is None:
+                tuning = Tuning(measure=bool(tune), cache=tune_cache)
+        if config is None and tuning is None:
+            tuning = "auto"  # Engine(graph) keeps its auto-resolve default
         self.graph = graph
         self.free_mask = free_mask
         self._config = config
-        self._tune = tune
-        self._tune_cache = tune_cache
+        self._tuning = _normalize_tuning(tuning)
 
     def plan(
         self,
@@ -569,21 +656,19 @@ class Engine:
         )
 
     def _resolve(self, sources):
-        cfg = self._config
-        auto = isinstance(cfg, str)
-        if not (auto or self._tune or self._tune_cache is not None):
-            return cfg, None  # concrete config, no tuning inputs: as-is
+        if self._tuning is None:
+            return self._config, None  # concrete config, no tuning: as-is
         from repro.tune import resolve_record  # lazy: tune builds on core/api
 
-        base = DeltaConfig() if auto else cfg
+        base = DeltaConfig() if self._config is None else self._config
         return resolve_record(
             self.graph,
             base,
             free_mask=self.free_mask,
-            cache_path=self._tune_cache,
-            measure=self._tune,
+            cache_path=self._tuning.cache,
+            measure=self._tuning.measure,
             sources=sources,
         )
 
 
-__all__ = ["Engine", "Plan"]
+__all__ = ["Engine", "Plan", "Tuning", "UpdateRefused"]

@@ -380,16 +380,21 @@ class DeltaSteppingSolver:
             "DeltaSteppingSolver is deprecated: use repro.api.Engine("
             "graph, config).plan() and the query algebra (DESIGN.md §10)",
             DeprecationWarning, stacklevel=2)
-        from repro.api import Engine  # lazy: api builds on this module
+        from repro.api import Engine, Tuning  # lazy: api builds on this
         # legacy semantics, preserved exactly: tune_cache is consulted
         # for config="auto" only — a concrete config a caller pinned is
         # never overwritten by a cached record (Engine would treat it as
         # a tuning base; the old _resolve_auto did not). sources=None:
         # the solver cannot know its future sources, so a tuning-chosen
         # frontier cap is dropped rather than trusted.
-        cache = tune_cache if isinstance(config, str) else None
-        self._plan = Engine(graph, config, free_mask=free_mask,
-                            tune_cache=cache).plan(sources=None)
+        if isinstance(config, str):
+            if config != "auto":
+                raise ValueError(f"config must be 'auto', got {config!r}")
+            engine = Engine(graph, None, free_mask=free_mask,
+                            tuning=Tuning(cache=tune_cache))
+        else:
+            engine = Engine(graph, config, free_mask=free_mask)
+        self._plan = engine.plan(sources=None)
         self.config = self._plan.config
         self.graph = graph
         self.backend = self._plan.backend

@@ -20,18 +20,18 @@ import time
 def _serve_sssp(args):
     import numpy as np
 
+    from repro.api import PointToPoint, SingleSource, Tuning
     from repro.core import DeltaConfig
     from repro.graphs import watts_strogatz
-    from repro.serve import SSSPQuery, SSSPServer
+    from repro.serve import Server
 
     g = watts_strogatz(args.nodes, args.degree, 1e-2, seed=0)
     t0 = time.perf_counter()
     # --tune = measured search; --tune-cache alone = cache hit or the
     # zero-measurement estimator (same semantics as launch.sssp). The
     # concrete config is always the tuning *base*, so --strategy /
-    # --shards survive tuning as non-searched fields (the server's
-    # Engine.plan resolves whenever tune inputs are present, and the
-    # winning TuningRecord attaches to the plan).
+    # --shards survive tuning as non-searched fields, and the winning
+    # TuningRecord attaches to the tenant's plan.
     auto = args.tune or args.tune_cache is not None
     config = DeltaConfig(delta=args.delta, strategy=args.strategy,
                          n_shards=args.shards)
@@ -39,32 +39,41 @@ def _serve_sssp(args):
         from repro.core import resolve_n_shards
         print(f"[serve] mesh-sharded relaxation over "
               f"{resolve_n_shards(args.shards)} device(s)")
-    srv = SSSPServer(g, config, batch_size=args.batch, tune=args.tune,
-                     tune_cache=args.tune_cache)
+    tuning = Tuning(measure=args.tune, cache=args.tune_cache) if auto \
+        else None
+    srv = Server(g, config=config, tuning=tuning, lane_width=args.batch)
     if auto:
-        cfg = srv.config
-        rec = srv.plan.record
+        cfg = srv.plan().config
+        rec = srv.plan().record
         provenance = "none" if rec is None else rec.source
         print(f"[serve] tuned at graph load: Δ={cfg.delta} "
               f"strategy={cfg.strategy} cap={cfg.frontier_cap} "
               f"record={provenance} "
               f"({time.perf_counter() - t0:.1f}s)")
-    srv.submit(SSSPQuery(qid=-1, source=0))
-    srv.step()                                  # warm up / compile
+    srv.submit(SingleSource(0))
+    srv.drain()                                 # warm up / compile
     rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        # mix of full distance-vector and point-to-point queries
-        target = int(rng.integers(g.n_nodes)) if i % 2 else None
-        srv.submit(SSSPQuery(qid=i, source=int(rng.integers(g.n_nodes)),
-                             target=target))
     t0 = time.perf_counter()
-    done = srv.run_to_completion()
+    tickets = []
+    with srv:                                   # continuous batch loop
+        for i in range(args.requests):
+            # mix of full distance-vector and point-to-point queries
+            src = int(rng.integers(g.n_nodes))
+            q = (PointToPoint(src, int(rng.integers(g.n_nodes)))
+                 if i % 2 else SingleSource(src))
+            tickets.append(srv.submit(q))
+        results = [t.result() for t in tickets]
     dt = time.perf_counter() - t0
-    n_paths = sum(1 for q in done if q.path is not None)
-    print(f"[serve] answered {len(done)} SSSP queries ({n_paths} with "
+    n_paths = sum(1 for r in results if getattr(r, "path", None) is not None)
+    stats = srv.stats()
+    print(f"[serve] answered {len(results)} SSSP queries ({n_paths} with "
           f"paths) in {dt:.2f}s "
-          f"({len(done) / dt:.1f} qps, batch={args.batch}, "
+          f"({len(results) / dt:.1f} qps, lanes={args.batch}, "
           f"|V|={g.n_nodes})")
+    print(f"[serve] p50={stats['latency_p50_ms']:.1f} ms "
+          f"p99={stats['latency_p99_ms']:.1f} ms "
+          f"occupancy={stats['mean_occupancy']:.2f} "
+          f"batches={stats['batches']} shed={stats['shed'] or 0}")
 
 
 def _serve_lm(args):

@@ -120,16 +120,18 @@ def main():
         # single-host path: the Query/Plan façade (DESIGN.md §10) —
         # resolution (tuning, caps) happens once in Engine.plan, solves
         # dispatch through the query algebra
-        from repro.api import Engine, MultiSource, SingleSource
+        from repro.api import Engine, MultiSource, SingleSource, Tuning
         from repro.core import DeltaConfig
         cfg = DeltaConfig(delta=args.delta, strategy=args.strategy,
                           pred_mode="argmin", interpret=args.interpret,
                           n_shards=args.shards)
         t0 = time.perf_counter()
+        tuning = (Tuning(measure=args.tune, cache=args.tune_cache)
+                  if (args.tune or args.tune_cache) else None)
         # sources= the ones actually being solved: a tuning-chosen
         # frontier cap is validated against exactly these
-        plan = Engine(g, cfg, free_mask=free, tune=args.tune,
-                      tune_cache=args.tune_cache).plan(sources=sources)
+        plan = Engine(g, cfg, free_mask=free,
+                      tuning=tuning).plan(sources=sources)
         cfg = plan.config
         if args.tune or args.tune_cache:
             print(f"[sssp] tuned config: Δ={cfg.delta} "

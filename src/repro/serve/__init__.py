@@ -1,3 +1,18 @@
+"""Serving layer: the async SSSP serving tier (``Server`` — continuous
+batching, multi-graph tenancy, admission control; DESIGN.md §13), the
+LM-decode continuous batcher (``BatchServer``), and the deprecated
+synchronous ``SSSPServer`` shim kept for legacy call sites.
+
+    from repro.serve import Server
+    from repro.api import SingleSource, PointToPoint
+
+    with Server({"road": g1, "social": g2}, tuning="auto") as srv:
+        t1 = srv.submit(SingleSource(0), graph="road")
+        t2 = srv.submit(PointToPoint(3, 99), graph="social", deadline=0.5)
+        print(t1.result().dist, t2.result().distance)
+    print(srv.stats())   # p50/p99 latency, occupancy, shed counts
+"""
+
 from repro.serve.decode import (
     BatchServer,
     Request,
@@ -5,5 +20,23 @@ from repro.serve.decode import (
     SSSPServer,
     generate,
 )
+from repro.serve.server import (
+    RequestRejected,
+    RequestTrace,
+    Server,
+    Ticket,
+    UpdateApplied,
+)
 
-__all__ = ["generate", "BatchServer", "Request", "SSSPQuery", "SSSPServer"]
+__all__ = [
+    "BatchServer",
+    "Request",
+    "RequestRejected",
+    "RequestTrace",
+    "SSSPQuery",
+    "SSSPServer",
+    "Server",
+    "Ticket",
+    "UpdateApplied",
+    "generate",
+]

@@ -142,28 +142,20 @@ class SSSPQuery:
 
 class SSSPServer:
     """Microbatching SSSP server — a **deprecated** thin shim over the
-    Query/Plan façade (prefer ``repro.api.Engine(...).plan()`` plus
-    ``MultiSource`` queries; DESIGN.md §10). Queued queries are answered
-    ``batch_size`` at a time by the plan's batched multi-source program.
-    Short batches are padded by repeating the last source (the padded
-    lanes are discarded), so every step runs the same compiled shape —
-    the serving-side counterpart of ``BatchServer``'s fixed slot count.
+    async serving tier (prefer ``repro.serve.Server``: submit queries,
+    collect ``Ticket`` results; DESIGN.md §13). The shim hosts one
+    tenant named ``"graph"`` on a private ``Server`` with
+    ``lane_width=batch_size`` and preserves the legacy synchronous
+    cadence: ``step()`` submits queued weight updates first (they apply
+    between microbatches, through the same ``UpdateBatch`` submit path
+    queries use), then up to ``batch_size`` queries, and drains the
+    batch loop inline — same padded multi-source program, same bitwise
+    answers as before the tier existed (tests/test_api_queries.py).
 
-    Tuning happens once, at graph-load time: ``config="auto"`` resolves
-    (Δ, backend, packing) through the tuning subsystem (cache hit or
-    zero-measurement estimator; ``tune=True`` runs the measured search
-    instead) and the resolved ``TuningRecord`` attaches to the plan
-    (``server.plan.record``) — the search cost amortizes over the query
-    stream (DESIGN.md §7). The query stream is unknown at load time, so
-    the plan is built with ``fallback=True``: a microbatch that trips
-    the compacted-frontier overflow flag is re-answered full-width at
-    the façade's single fallback point (tuning may move time, never
-    answers).
-
-    Dynamic graphs: the server holds its plan *resident* across the
-    query stream, so edge-cost updates (``update(edge_ids, weights)``)
-    are applied to the live plan between microbatches — weights swap,
-    topology and compiled programs stay (repro.dynamic, DESIGN.md §11).
+    Tuning still happens once, at graph-load time: ``config="auto"``
+    resolves (Δ, backend, packing) through the tuning subsystem exactly
+    as ``Engine(graph, tuning=...)`` does, and the resolved
+    ``TuningRecord`` attaches to the plan (``server.plan.record``).
     """
 
     def __init__(self, graph, config=None, *, batch_size: int = 8,
@@ -172,18 +164,33 @@ class SSSPServer:
         import warnings
 
         warnings.warn(
-            "SSSPServer is deprecated: use repro.api.Engine(...).plan("
+            "SSSPServer is deprecated: use repro.serve.Server (async "
+            "serving tier, DESIGN.md §13) or repro.api.Engine(...).plan("
             "fallback=True) with MultiSource queries (DESIGN.md §10)",
             DeprecationWarning, stacklevel=2)
-        from repro.api import Engine
+        from repro.api import Tuning
         from repro.core import DeltaConfig
-        config = config or DeltaConfig()
-        # a concrete config survives as the tuning *base*: its
-        # non-searched fields (pred_mode, n_shards, ...) carry into the
-        # tuned result instead of being silently dropped
-        self._plan = Engine(graph, config, free_mask=free_mask, tune=tune,
-                            tune_cache=tune_cache).plan(fallback=True)
-        self.config = self._plan.config
+        from repro.serve.server import Server
+
+        # legacy knob translation: config="auto" meant resolve from
+        # scratch; a concrete config survives as the tuning *base* so
+        # its non-searched fields (pred_mode, n_shards, ...) carry into
+        # the tuned result instead of being silently dropped
+        if isinstance(config, str):
+            if config != "auto":
+                raise ValueError(f"config must be 'auto', got {config!r}")
+            base = None
+            tuning = Tuning(measure=bool(tune), cache=tune_cache)
+        else:
+            base = config or DeltaConfig()
+            tuning = (Tuning(measure=bool(tune), cache=tune_cache)
+                      if (tune or tune_cache is not None) else None)
+        self._server = Server(config=base, tuning=tuning,
+                              lane_width=batch_size)
+        self._server.admit("graph", graph, free_mask=free_mask)
+        # the legacy server tuned eagerly at graph load: srv.config is
+        # the resolved DeltaConfig before the first query arrives
+        self.config = self._server.plan("graph").config
         self.graph = graph
         self.free_mask = free_mask
         self.batch_size = batch_size
@@ -193,7 +200,7 @@ class SSSPServer:
     @property
     def plan(self):
         """The underlying ``repro.api.Plan`` (tuning record included)."""
-        return self._plan
+        return self._server.plan("graph")
 
     def submit(self, query: SSSPQuery):
         if query.target is not None and self.config.pred_mode == "none":
@@ -208,34 +215,35 @@ class SSSPServer:
         answered against one consistent weight snapshot."""
         self._pending_updates.append((edge_ids, new_weights))
 
-    def _apply_updates(self):
-        for edge_ids, new_weights in self._pending_updates:
-            self._plan.update(edge_ids, new_weights)
-        if self._pending_updates:
-            self.graph = self._plan.graph
-        self._pending_updates = []
-
     def step(self) -> List[SSSPQuery]:
         """Serve one microbatch; returns the completed queries. Pending
-        weight updates are applied first (between microbatches)."""
-        from repro.api import MultiSource, extract_path
-        self._apply_updates()
-        if not self.queue:
-            return []
+        weight updates are applied first (between microbatches): the
+        tier's batch former runs consecutive ``UpdateBatch`` submissions
+        as an exclusive update batch before the query lanes."""
+        from repro.api import PointToPoint, SingleSource, UpdateBatch
+        upd_tickets = [
+            self._server.submit(UpdateBatch(edge_ids, new_weights))
+            for edge_ids, new_weights in self._pending_updates]
+        self._pending_updates = []
         batch = self.queue[:self.batch_size]
         self.queue = self.queue[self.batch_size:]
-        sources = [q.source for q in batch]
-        sources += [sources[-1]] * (self.batch_size - len(sources))
-        res = self._plan.solve(MultiSource(np.asarray(sources, np.int32)))
-        dist = np.asarray(res.dist, np.int64)
-        pred = np.asarray(res.pred)
-        for i, q in enumerate(batch):
+        tickets = [
+            self._server.submit(
+                SingleSource(q.source) if q.target is None
+                else PointToPoint(q.source, q.target))
+            for q in batch]
+        self._server.drain()
+        if upd_tickets:
+            self.graph = self.plan.graph
+            for t in upd_tickets:
+                t.result()                   # surface refused updates
+        for q, t in zip(batch, tickets):
+            res = t.result()
             if q.target is None:
-                q.dist = dist[i]
+                q.dist = np.asarray(res.dist, np.int64)
             else:
-                q.dist = dist[i, q.target]
-                q.path = extract_path(pred[i], q.source, q.target,
-                                      self.graph.n_nodes)
+                q.dist = np.int64(res.distance)
+                q.path = res.path
             q.done = True
         return batch
 

@@ -28,9 +28,15 @@ API_EXPORTS = {
     "SingleSource",
     "SingleSourceResult",
     "Telemetry",
+    "Tuning",
     "UpdateBatch",
+    "UpdateRefused",
     "extract_path",
 }
+
+# the async serving tier (DESIGN.md §13)
+SERVE_EXPORTS = {"Server", "Ticket", "RequestRejected", "RequestTrace",
+                 "UpdateApplied"}
 
 # deprecated aliases: the pre-façade entry points kept as thin shims
 # under the bitwise-parity contract (tests/test_api_queries.py)
@@ -46,6 +52,31 @@ def test_api_export_snapshot():
     assert set(api.__all__) == API_EXPORTS
     for name in api.__all__:
         assert hasattr(api, name), name
+
+
+def test_serve_export_snapshot():
+    for name in SERVE_EXPORTS:
+        assert name in serve.__all__, name
+        assert hasattr(serve, name), name
+
+
+def test_server_surface():
+    """The serving tier's load-bearing signatures (DESIGN.md §13)."""
+    assert list(inspect.signature(serve.Server.__init__).parameters) == [
+        "self", "graphs", "config", "tuning", "lane_width", "max_resident",
+        "max_queue", "clock"]
+    assert list(inspect.signature(serve.Server.submit).parameters) == [
+        "self", "query", "graph", "deadline"]
+    assert list(inspect.signature(serve.Server.admit).parameters) == [
+        "self", "name", "graph", "config", "free_mask"]
+    for attr in ("submit", "admit", "plan", "stats", "pump", "drain",
+                 "start", "close"):
+        assert hasattr(serve.Server, attr), attr
+    for attr in ("result", "done", "exception"):
+        assert hasattr(serve.Ticket, attr), attr
+    assert [f for f in serve.RequestTrace.__dataclass_fields__] == [
+        "tenant", "kind", "t_submit", "t_batch", "t_solve", "t_done",
+        "batch_occupancy", "shed"]
 
 
 def test_deprecated_aliases_still_exported():
@@ -83,7 +114,10 @@ def test_engine_and_plan_surface():
     from repro.graphs.structures import COOGraph
 
     assert list(inspect.signature(api.Engine.__init__).parameters) == [
-        "self", "graph", "config", "free_mask", "tune", "tune_cache"]
+        "self", "graph", "config", "free_mask", "tuning", "tune",
+        "tune_cache"]
+    assert [f for f in api.Tuning.__dataclass_fields__] == [
+        "measure", "cache"]
     assert list(inspect.signature(api.Engine.plan).parameters) == [
         "self", "sources", "fallback"]
     assert list(inspect.signature(api.Plan.solve).parameters) == [

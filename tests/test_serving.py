@@ -1,0 +1,342 @@
+"""The async serving tier (repro.serve.Server, DESIGN.md §13): mixed
+async traffic must stay bitwise identical to serial execution through
+``Engine.plan()``; tenancy (LRU eviction + cache-identical re-admission)
+and admission control (queue caps, deadlines, structured update refusal)
+must degrade by typed rejection, never by dropping or corrupting an
+accepted request."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    BoundedRadius,
+    Engine,
+    ManyToMany,
+    PointToPoint,
+    SingleSource,
+    Tuning,
+    UpdateBatch,
+    UpdateRefused,
+)
+from repro.core import DeltaConfig, dijkstra
+from repro.graphs import square_lattice, watts_strogatz
+from repro.serve import RequestRejected, Server, UpdateApplied
+
+CFG = DeltaConfig(delta=10, pred_mode="argmin")
+
+
+def _edge_weights(g):
+    """(u, v) -> min edge weight lookup for path-cost validation."""
+    w = {}
+    src, dst, ws = np.asarray(g.src), np.asarray(g.dst), np.asarray(g.w)
+    for u, v, c in zip(src, dst, ws):
+        key = (int(u), int(v))
+        w[key] = min(w[key], int(c)) if key in w else int(c)
+    return w
+
+
+def _path_cost(g, path):
+    ew = _edge_weights(g)
+    return sum(ew[(path[i], path[i + 1])] for i in range(len(path) - 1))
+
+
+def test_mixed_async_bitwise_vs_serial():
+    """The acceptance pin: mixed query types over two tenant graphs,
+    served through the threaded batch loop, answer bitwise what a serial
+    ``plan.solve`` stream answers."""
+    g1 = watts_strogatz(200, 6, 0.05, seed=7)
+    g2 = square_lattice(12, weighted=True, seed=3)
+    queries = {
+        "ws": [SingleSource(0), PointToPoint(0, 37), BoundedRadius(5, 30),
+               SingleSource(11), ManyToMany([0, 1], [9, 10, 11], tile=3)],
+        "lat": [SingleSource(2), BoundedRadius(0, 40),
+                PointToPoint(0, 100), SingleSource(60)],
+    }
+    serial = {
+        name: [Engine(g, CFG).plan(fallback=True).solve(q) for q in qs]
+        for (name, g), qs in zip([("ws", g1), ("lat", g2)],
+                                 [queries["ws"], queries["lat"]])
+    }
+    with Server({"ws": g1, "lat": g2}, config=CFG, lane_width=3) as srv:
+        tickets = {name: [srv.submit(q, graph=name) for q in qs]
+                   for name, qs in queries.items()}
+        results = {name: [t.result(timeout=300) for t in ts]
+                   for name, ts in tickets.items()}
+    for name, g in (("ws", g1), ("lat", g2)):
+        for q, got, ref in zip(queries[name], results[name], serial[name]):
+            if isinstance(q, (SingleSource, BoundedRadius)):
+                np.testing.assert_array_equal(
+                    np.asarray(got.dist), np.asarray(ref.dist), err_msg=repr(q))
+                np.testing.assert_array_equal(
+                    np.asarray(got.pred), np.asarray(ref.pred), err_msg=repr(q))
+            elif isinstance(q, ManyToMany):
+                np.testing.assert_array_equal(
+                    np.asarray(got.matrix), np.asarray(ref.matrix))
+            else:  # PointToPoint: distance is bitwise; the path is any
+                # shortest one (batched lanes settle every vertex, the
+                # serial early exit does not — ties may resolve apart)
+                assert got.distance == ref.distance, repr(q)
+                assert (got.path is None) == (ref.path is None), repr(q)
+                if got.path is not None:
+                    assert got.path[0] == q.source
+                    assert got.path[-1] == q.target
+                    assert _path_cost(g, got.path) == got.distance
+    stats = srv.stats()
+    assert stats["completed"] == 9
+    assert stats["shed"] == {}
+    assert stats["batches"]["lanes"] >= 2
+    assert stats["batches"]["solo"] == 1     # the ManyToMany
+
+
+def test_per_tenant_order_survives_concurrent_submitters():
+    """Two threads hammer two tenants concurrently; every ticket
+    resolves, and per-tenant answers match the per-tenant serial
+    stream (cross-tenant interleaving is free, intra-tenant is FIFO)."""
+    g1 = watts_strogatz(150, 6, 0.05, seed=1)
+    g2 = watts_strogatz(150, 6, 0.05, seed=2)
+    refs = {"a": dijkstra(g1, 3)[0], "b": dijkstra(g2, 4)[0]}
+    out = {}
+
+    def client(srv, name, source):
+        ts = [srv.submit(SingleSource(source), graph=name) for _ in range(5)]
+        out[name] = [t.result(timeout=300) for t in ts]
+
+    with Server({"a": g1, "b": g2}, config=CFG, lane_width=4) as srv:
+        threads = [threading.Thread(target=client, args=(srv, "a", 3)),
+                   threading.Thread(target=client, args=(srv, "b", 4))]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    for name in ("a", "b"):
+        for r in out[name]:
+            np.testing.assert_array_equal(
+                np.asarray(r.dist, np.int64), refs[name])
+
+
+def test_lru_evicts_coldest_and_cache_readmission_is_bitwise(tmp_path):
+    """max_resident bounds the plan LRU: building a third plan evicts
+    the coldest (least recently served) tenant, and the evicted tenant's
+    next request re-resolves through the tuning cache into a bitwise-
+    identical plan and answer."""
+    graphs = {"a": watts_strogatz(200, 6, 0.05, seed=0),
+              "b": watts_strogatz(220, 6, 0.05, seed=1),
+              "c": watts_strogatz(240, 6, 0.05, seed=2)}
+    cache = str(tmp_path / "serve_cache.json")
+    srv = Server(graphs, config=DeltaConfig(pred_mode="argmin"),
+                 tuning=Tuning(measure=True, cache=cache),
+                 lane_width=2, max_resident=2)
+    first = {}
+    for name in ("a", "b", "a", "c"):   # c's build must evict b (coldest)
+        t = srv.submit(SingleSource(0), graph=name)
+        srv.drain()
+        first.setdefault(name, t.result())
+    stats = srv.stats()
+    assert stats["evictions"] == 1
+    assert stats["resident"] == ["a", "c"]
+    assert stats["plans_built"] == 3
+    record0 = srv.plan("a").record
+    assert record0 is not None and record0.source == "measured"
+
+    # re-admission: b's next request rebuilds its plan; the fingerprint-
+    # keyed cache record resolves it without re-measuring, bitwise equal
+    t = srv.submit(SingleSource(0), graph="b")
+    srv.drain()
+    again = t.result()
+    stats = srv.stats()
+    assert stats["plans_built"] == 4
+    assert stats["evictions"] == 2           # a or c paid for b's slot
+    rec = srv.plan("b").record
+    assert rec is not None
+    # measure=True re-marks a fingerprint hit as source="cache": the
+    # rebuild resolved from the persisted record, it did not re-measure
+    assert rec.source == "cache"
+    np.testing.assert_array_equal(np.asarray(again.dist),
+                                  np.asarray(first["b"].dist))
+    np.testing.assert_array_equal(np.asarray(again.pred),
+                                  np.asarray(first["b"].pred))
+    assert srv.plan("b").config == Engine(
+        graphs["b"], tuning=Tuning(cache=cache)).plan().config
+
+
+def test_queue_cap_sheds_typed_and_never_drops_accepted():
+    g = watts_strogatz(150, 6, 0.05, seed=0)
+    srv = Server(g, config=CFG, lane_width=4, max_queue=4)
+    tickets = [srv.submit(SingleSource(i)) for i in range(10)]
+    shed = [t for t in tickets if t.done()]
+    accepted = [t for t in tickets if not t.done()]
+    assert len(accepted) == 4 and len(shed) == 6
+    for t in shed:
+        exc = t.exception(0)
+        assert isinstance(exc, RequestRejected)
+        assert exc.reason == "queue_full"
+        assert t.trace.shed == "queue_full"
+        with pytest.raises(RequestRejected, match="queue_full"):
+            t.result(0)
+    srv.drain()
+    # every accepted request completes with a real answer
+    for t, src in zip(tickets, range(10)):
+        assert t.done()
+        if t.exception(0) is None:
+            ref, _ = dijkstra(g, src)
+            np.testing.assert_array_equal(
+                np.asarray(t.result().dist, np.int64), ref)
+    stats = srv.stats()
+    assert stats["submitted"] == 10
+    assert stats["completed"] == 4
+    assert stats["shed"] == {"queue_full": 6}
+    assert stats["queued"] == 0
+
+
+def test_deadline_sheds_at_batch_formation():
+    """Deadline-based shedding under an injected clock: requests whose
+    budget expired while queued are shed when the next batch forms;
+    requests without a deadline (or with slack) are served."""
+    g = watts_strogatz(150, 6, 0.05, seed=0)
+    now = [0.0]
+    srv = Server(g, config=CFG, lane_width=4, clock=lambda: now[0])
+    t_fast = srv.submit(SingleSource(0), deadline=0.5)
+    t_slow = srv.submit(SingleSource(1), deadline=60.0)
+    t_none = srv.submit(SingleSource(2))
+    now[0] = 1.0                              # t_fast's budget expires
+    srv.drain()
+    exc = t_fast.exception(0)
+    assert isinstance(exc, RequestRejected) and exc.reason == "deadline"
+    for t, src in ((t_slow, 1), (t_none, 2)):
+        ref, _ = dijkstra(g, src)
+        np.testing.assert_array_equal(
+            np.asarray(t.result(0).dist, np.int64), ref)
+    assert srv.stats()["shed"] == {"deadline": 1}
+
+
+def test_interleaved_updates_bitwise_vs_serial():
+    """UpdateBatch rides the same submit path as queries; interleaved
+    update/query traffic on two tenants answers bitwise what the serial
+    update-then-solve sequence answers on each tenant's own plan."""
+    graphs = {"x": watts_strogatz(180, 6, 0.05, seed=4),
+              "y": square_lattice(10, weighted=True, seed=5)}
+    rng = np.random.default_rng(0)
+    program = {}
+    for name, g in graphs.items():
+        ids = rng.choice(g.n_edges, size=12, replace=False)
+        neww = np.clip(np.asarray(g.w)[ids] + 7, 1, None)
+        program[name] = [SingleSource(0), UpdateBatch(ids, neww),
+                         SingleSource(0), PointToPoint(0, 50)]
+    serial = {}
+    for name, g in graphs.items():
+        plan = Engine(g, CFG).plan(fallback=True)
+        outs = []
+        for q in program[name]:
+            if isinstance(q, UpdateBatch):
+                plan.update(q.edge_ids, q.new_weights)
+                outs.append(None)
+            else:
+                outs.append(plan.solve(q))
+        serial[name] = outs
+    srv = Server(graphs, config=CFG, lane_width=4)
+    tickets = {}
+    # interleave the two tenants' submissions
+    for qx, qy in zip(program["x"], program["y"]):
+        tickets.setdefault("x", []).append(srv.submit(qx, graph="x"))
+        tickets.setdefault("y", []).append(srv.submit(qy, graph="y"))
+    srv.drain()
+    for name in graphs:
+        for q, t, ref in zip(program[name], tickets[name], serial[name]):
+            got = t.result(0)
+            if isinstance(q, UpdateBatch):
+                # lanes never establish residency, so the tier acks the
+                # weight swap instead of re-solving a resident problem
+                assert got == UpdateApplied(n_edges=12)
+            elif isinstance(q, SingleSource):
+                np.testing.assert_array_equal(
+                    np.asarray(got.dist), np.asarray(ref.dist))
+                np.testing.assert_array_equal(
+                    np.asarray(got.pred), np.asarray(ref.pred))
+            else:
+                assert got.distance == ref.distance
+    assert srv.stats()["batches"]["update"] == 2
+
+
+def test_grid_update_refusal_sheds_request_not_loop():
+    """Satellite: the grid-stencil plan's structured refusal
+    (UpdateRefused, reason='grid_costs') sheds the one offending update
+    ticket; the batch loop survives and keeps serving the tenant."""
+    from repro.graphs import grid_map
+
+    g, free = grid_map(8, 8, seed=0)
+    grid_cfg = DeltaConfig(delta=13, strategy="pallas", interpret=True,
+                           pred_mode="none")
+    srv = Server(lane_width=2)
+    srv.admit("map", g, config=grid_cfg, free_mask=free)
+    t_upd = srv.submit(UpdateBatch([0], [5]), graph="map")
+    t_query = srv.submit(SingleSource(0), graph="map")
+    srv.drain()
+    exc = t_upd.exception(0)
+    assert isinstance(exc, RequestRejected)
+    assert exc.reason == "update_refused"
+    assert "grid" in str(exc)
+    res = t_query.result(0)                  # the loop kept serving
+    ref = Engine(g, grid_cfg, free_mask=free).plan().solve(SingleSource(0))
+    np.testing.assert_array_equal(np.asarray(res.dist), np.asarray(ref.dist))
+    assert srv.stats()["shed"] == {"update_refused": 1}
+
+    # the structured refusal itself: a ValueError subclass carrying the
+    # machine-readable reason tag
+    plan = Engine(g, grid_cfg, free_mask=free).plan()
+    with pytest.raises(UpdateRefused, match="grid") as ei:
+        plan.update([0], [5])
+    assert ei.value.reason == "grid_costs"
+    assert isinstance(ei.value, ValueError)  # old except-clauses still work
+
+
+def test_invalid_and_unknown_tenant_reject_without_poisoning():
+    g = watts_strogatz(120, 6, 0.05, seed=0)
+    srv = Server({"g": g}, config=CFG, lane_width=4)
+    bad_src = srv.submit(SingleSource(10_000), graph="g")
+    bad_tenant = srv.submit(SingleSource(0), graph="nope")
+    good = srv.submit(SingleSource(0), graph="g")
+    srv.drain()
+    assert bad_src.exception(0).reason == "invalid"
+    assert bad_tenant.exception(0).reason == "invalid"
+    ref, _ = dijkstra(g, 0)
+    np.testing.assert_array_equal(
+        np.asarray(good.result(0).dist, np.int64), ref)
+
+
+def test_close_without_drain_sheds_typed():
+    g = watts_strogatz(120, 6, 0.05, seed=0)
+    srv = Server(g, config=CFG)
+    t = srv.submit(SingleSource(0))
+    srv.close(drain=False)
+    assert t.exception(0).reason == "closed"
+    late = srv.submit(SingleSource(1))
+    assert late.exception(0).reason == "closed"
+
+
+def test_engine_tuning_parameter_and_deprecation_shims(tmp_path):
+    """Satellite: the three legacy knobs (config='auto', tune=,
+    tune_cache=) collapse into tuning=; the shims warn and resolve to
+    the same plan the new spelling resolves to."""
+    g = watts_strogatz(200, 6, 0.05, seed=0)
+    new = Engine(g, tuning="auto").plan()
+    with pytest.deprecated_call(match="config='auto' is deprecated"):
+        old = Engine(g, "auto").plan()
+    assert old.config == new.config
+    assert old.record.delta == new.record.delta
+
+    cache = str(tmp_path / "t.json")
+    with pytest.deprecated_call(match="tune=/tune_cache= are deprecated"):
+        old = Engine(g, tune=True, tune_cache=cache).plan(sources=(0,))
+    new = Engine(g, tuning=Tuning(measure=True, cache=cache)).plan(
+        sources=(0,))
+    assert old.config == new.config
+    assert new.record.source in ("measured", "cache")
+
+    # tuning='measure' shorthand and validation
+    from repro.api.engine import _normalize_tuning
+    assert _normalize_tuning("measure") == Tuning(measure=True)
+    with pytest.raises(ValueError, match="tuning must be"):
+        Engine(g, tuning=3.14).plan()
+    with pytest.raises(ValueError, match="unknown config string"):
+        Engine(g, "fastest")
