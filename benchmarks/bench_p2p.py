@@ -1,0 +1,73 @@
+"""Point-to-point mode benchmarks (repro.landmarks, DESIGN.md §14).
+
+The preprocessing-vs-query-latency trade the ALT subsystem buys: a
+one-time landmark distance-table build (gate:false — it is a capacity
+cost, paid once per tenant under the Server LRU) against per-query
+speedups of the goal-directed modes over the early-exit unidirectional
+solve. Three families spanning the paper's regimes:
+
+* ``lattice``   — long diameter, the early-exit worst case (a far
+  target settles nearly every bucket); goal direction + meeting in the
+  middle collapse the explored cone.
+* ``gamemap``   — the paper's grid-with-obstacles family; near-metric
+  structure is where landmark potentials are tightest.
+* ``smallworld``— low diameter; the regime where *bidirectional*
+  search carries the win and ALT adds little (the derived column keeps
+  the evidence).
+
+Every timed mode first asserts its distance bitwise equal to the
+early-exit answer — a bench row can never report a speedup for a wrong
+answer (the full differential matrix lives in tests/test_landmarks.py).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import row, scaled, time_fn
+from repro.api import Engine, PointToPoint
+from repro.core import DeltaConfig
+from repro.graphs import grid_map, square_lattice, watts_strogatz
+
+MODES = ("alt", "bidirectional", "alt_bidirectional")
+
+
+def _families():
+    side = int(np.sqrt(scaled(40_000)))
+    lat = square_lattice(side, weighted=True)
+    gm_side = int(np.sqrt(scaled(22_500)))
+    gm, free = grid_map(gm_side, gm_side, 0.1, seed=0)
+    sw = watts_strogatz(scaled(10_000), 12, 1e-2, seed=0)
+    # far targets: opposite corner on the grids, antipode-ish on the ring
+    yield "lattice", lat, None, 10, side * side - 1
+    yield "gamemap", gm, free, 13, gm_side * gm_side - 1
+    yield "smallworld", sw, None, 10, sw.n_nodes // 2
+
+
+def main():
+    for name, g, free, delta, target in _families():
+        cfg = DeltaConfig(delta=delta, strategy="ell", pred_mode="none")
+        plan = Engine(g, cfg, free_mask=free).plan()
+        base = plan.solve(PointToPoint(0, target))
+        t0 = time.perf_counter()
+        plan.prepare_landmarks(k=4)
+        row(f"p2p/{name}/preprocess", time.perf_counter() - t0,
+            f"k={plan.landmark_tables.k};n={g.n_nodes}", gate=False)
+        t_base = time_fn(
+            lambda: plan.solve(PointToPoint(0, target)).distance)
+        row(f"p2p/{name}/early_exit", t_base,
+            f"dist={base.distance};"
+            f"buckets={int(base.telemetry.buckets)}")
+        for mode in MODES:
+            q = PointToPoint(0, target, mode=mode)
+            res = plan.solve(q)
+            assert res.distance == base.distance, (name, mode)
+            t = time_fn(lambda: plan.solve(q).distance)
+            row(f"p2p/{name}/{mode}", t,
+                f"speedup={t_base / t:.2f};dist={res.distance};"
+                f"buckets={int(res.telemetry.buckets)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ def main(argv=None) -> int:
         bench_dynamic,
         bench_gamemap,
         bench_multisource,
+        bench_p2p,
         bench_preprocess,
         bench_queries,
         bench_rmat,
@@ -49,7 +50,7 @@ def main(argv=None) -> int:
     for mod in (bench_smallworld, bench_delta_sweep, bench_scaling,
                 bench_preprocess, bench_rmat, bench_gamemap,
                 bench_multisource, bench_sharded, bench_scaling_shards,
-                bench_queries, bench_dynamic, bench_serving):
+                bench_queries, bench_p2p, bench_dynamic, bench_serving):
         modules[mod.__name__.rsplit(".", 1)[-1].removeprefix("bench_")] = mod
     if args.only is not None:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -19,8 +19,14 @@ other plan of the same shape. The pre-façade entry points —
 package with bitwise-identical results.
 """
 
-from repro.api.engine import Engine, Plan, Tuning, UpdateRefused
-from repro.api.paths import extract_path
+from repro.api.engine import (
+    Engine,
+    LandmarkRefused,
+    Plan,
+    Tuning,
+    UpdateRefused,
+)
+from repro.api.paths import extract_path, stitch_bidirectional_path
 from repro.api.queries import (
     BoundedRadius,
     BoundedRadiusResult,
@@ -42,6 +48,7 @@ __all__ = [
     "BoundedRadius",
     "BoundedRadiusResult",
     "Engine",
+    "LandmarkRefused",
     "ManyToMany",
     "ManyToManyResult",
     "MultiSource",
@@ -58,4 +65,5 @@ __all__ = [
     "UpdateBatch",
     "UpdateRefused",
     "extract_path",
+    "stitch_bidirectional_path",
 ]

@@ -50,7 +50,7 @@ from typing import Optional, Sequence, Union
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.paths import extract_path
+from repro.api.paths import extract_path, stitch_bidirectional_path
 from repro.api.queries import (
     BoundedRadius,
     BoundedRadiusResult,
@@ -105,6 +105,23 @@ class UpdateRefused(ValueError):
     def __init__(self, message: str, *, reason: str):
         super().__init__(message)
         self.reason = reason
+
+
+class LandmarkRefused(UpdateRefused):
+    """Refusal of a weight batch that would invalidate the plan's
+    landmark tables under the ``on_update="refuse"`` policy
+    (``Plan.prepare_landmarks``): some new weight drops below its
+    table-build value, so the precomputed ALT potentials would stop
+    being admissible. Raised BEFORE any weight is applied — the plan
+    (and its tables) are untouched, and the serving tier sheds the
+    ticket on the standard ``UpdateRefused`` path.
+
+    >>> try:
+    ...     raise LandmarkRefused("no", reason="landmarks_stale")
+    ... except UpdateRefused as e:
+    ...     e.reason
+    'landmarks_stale'
+    """
 
 
 @dataclasses.dataclass(frozen=True)
@@ -224,6 +241,10 @@ class Plan:
         self._repair_twin_key = None
         self._twin_width = None   # weight-independent ELL pad width
         self._twin_cap_floor = 64  # escalates on twin overflow (sticky)
+        # landmark residency (repro.landmarks, DESIGN.md §14): built by
+        # prepare_landmarks, or lazily with defaults on the first
+        # landmark-mode PointToPoint
+        self._landmarks = None
 
     # -- the one public operation -------------------------------------------
 
@@ -256,6 +277,9 @@ class Plan:
             # solved on the same graph/pred_mode (only the cap differs),
             # so update/resolve keep working after an overflow demotes
             self._demoted._resident = self._resident
+            # landmark residency too: tables/spec only depend on the
+            # graph, never on the frontier cap
+            self._demoted._landmarks = self._landmarks
             res = _mark_fallback(self._demoted._dispatch(query))
         return res
 
@@ -279,9 +303,22 @@ class Plan:
                 "edge-weight updates do not apply to them",
                 reason="grid_costs",
             )
+        lm = self._landmarks
+        if (lm is not None and lm.spec.on_update == "refuse"
+                and lm.would_invalidate(edge_ids, new_weights)):
+            # checked BEFORE applying: a refused batch leaves both the
+            # weights and the landmark tables exactly as they were
+            raise LandmarkRefused(
+                "weight decrease below the landmark-table build values "
+                "would invalidate the precomputed ALT potentials (plan "
+                "prepared with on_update='refuse')",
+                reason="landmarks_stale",
+            )
         self.graph = apply_weight_update(self.graph, edge_ids, new_weights)
         self.backend = self._rebuild_backend()
         self._graph_version += 1
+        if lm is not None:
+            lm.note_update(self.graph)
         if self._demoted is not None:
             self._demoted.update(edge_ids, new_weights)
         return self
@@ -451,6 +488,58 @@ class Plan:
             overflow=bool(np.any(np.asarray(over))),
         )
 
+    # -- landmark residency (repro.landmarks, DESIGN.md §14) -----------------
+
+    def prepare_landmarks(
+        self,
+        k: int = 4,
+        strategy: str = "farthest",
+        seed: int = 0,
+        *,
+        store: Optional[str] = None,
+        on_update: str = "recompute",
+        build: bool = True,
+    ) -> "Plan":
+        """Attach landmark residency to the plan: ``k`` landmarks chosen
+        by ``strategy`` (``farthest``/``random``), distance tables
+        persisted in the fingerprint-keyed ``store`` directory (``None``
+        = in-memory), and the ``on_update`` staleness policy for weight
+        batches that would invalidate the tables (``recompute`` drops
+        and lazily rebuilds them; ``refuse`` rejects the batch with
+        ``LandmarkRefused`` before applying it). ``build=False`` defers
+        the precompute to the first landmark-mode query (the serving
+        tier's lazy per-tenant configuration). Returns ``self``."""
+        from repro.landmarks import LandmarkSpec, LandmarkState, require_canonical
+
+        spec = LandmarkSpec(k=k, strategy=strategy, seed=seed,
+                            store=store, on_update=on_update)
+        self._landmarks = LandmarkState(spec, self.config.delta)
+        if build:
+            # deferred builds re-check at the first landmark-mode query
+            # (solve_p2p), so a server-wide landmarks knob cannot break
+            # a non-canonical tenant that never asks for these modes
+            require_canonical(self.graph)
+            self._landmarks.ensure_tables(self.graph)
+        if self._demoted is not None:
+            self._demoted._landmarks = self._landmarks
+        return self
+
+    def _landmark_state(self):
+        """The plan's landmark residency, created with the default spec
+        on first use (a landmark-mode query against an unprepared plan
+        still works — it just pays the table build lazily)."""
+        if self._landmarks is None:
+            from repro.landmarks import LandmarkSpec, LandmarkState
+
+            self._landmarks = LandmarkState(LandmarkSpec(), self.config.delta)
+        return self._landmarks
+
+    @property
+    def landmark_tables(self):
+        """The resident ``LandmarkTables``, or ``None`` when unprepared,
+        not yet built, or invalidated by a weight update."""
+        return None if self._landmarks is None else self._landmarks.tables
+
     def explain(self) -> dict:
         """Plan provenance for logs/telemetry: the resolved operating
         point plus the tuning record (if any) it came from."""
@@ -461,6 +550,11 @@ class Plan:
             "pred_mode": cfg.pred_mode,
             "frontier_cap": cfg.frontier_cap,
             "n_shards": cfg.n_shards,
+            "p2p_mode": cfg.p2p_mode,
+            "landmarks": (
+                None if self.landmark_tables is None
+                else self.landmark_tables.k
+            ),
             "tuning_source": None if self.record is None else self.record.source,
             "fallback_taken": self._demoted is not None,
             "resident_source": (
@@ -506,6 +600,9 @@ class Plan:
         n = self.graph.n_nodes
         src = jnp.asarray(_check_vertex("source", q.source, n), jnp.int32)
         tgt = jnp.asarray(_check_vertex("target", q.target, n), jnp.int32)
+        mode = q.mode if q.mode is not None else self.config.p2p_mode
+        if mode != "early_exit":
+            return self._p2p_landmark(q, mode)
         tent, outer, inner, over = self._run_p2p(self.backend, src, tgt)
         # every vertex on a shortest source->target path is settled at
         # early exit (its bucket precedes the target's), so the partial
@@ -518,6 +615,31 @@ class Plan:
                 np.asarray(pred), int(q.source), int(q.target), self.graph.n_nodes
             )
         return PointToPointResult(distance, path, Telemetry(outer, inner, over))
+
+    def _p2p_landmark(self, q: PointToPoint, mode: str) -> PointToPointResult:
+        """Goal-directed point-to-point (repro.landmarks): the landmark
+        state solves over a reduced / doubled graph and hands back
+        original-space predecessor trees; the distance is bitwise the
+        unidirectional answer (tests/test_landmarks.py pins this), and
+        the path goes through the same cycle-guarded extractors as every
+        other query."""
+        lm = self._landmark_state()
+        want_pred = self.config.pred_mode != "none"
+        r = lm.solve_p2p(self.graph, q.source, q.target, mode,
+                         want_pred=want_pred)
+        tel = Telemetry(np.int32(r.outer), np.int32(r.inner),
+                        np.bool_(r.overflow))
+        if r.distance >= int(INF32) or not want_pred:
+            return PointToPointResult(r.distance, None, tel)
+        n = self.graph.n_nodes
+        if r.pred_b is None:
+            path = extract_path(np.asarray(r.pred_f), int(q.source),
+                                int(q.target), n)
+        else:
+            path = stitch_bidirectional_path(
+                np.asarray(r.pred_f), np.asarray(r.pred_b),
+                int(q.source), int(q.target), r.meet, n)
+        return PointToPointResult(r.distance, path, tel)
 
     def _bounded(self, q: BoundedRadius) -> BoundedRadiusResult:
         radius = int(q.radius)
@@ -671,4 +793,4 @@ class Engine:
         )
 
 
-__all__ = ["Engine", "Plan", "Tuning", "UpdateRefused"]
+__all__ = ["Engine", "LandmarkRefused", "Plan", "Tuning", "UpdateRefused"]

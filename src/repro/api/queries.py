@@ -65,15 +65,21 @@ class MultiSource:
 @dataclasses.dataclass(frozen=True)
 class PointToPoint:
     """One source -> target distance (and path, when the plan tracks
-    predecessors), with early exit once the target's bucket settles.
+    predecessors). ``mode`` picks the point-to-point algorithm
+    (``core.P2P_MODES``): ``early_exit`` stops once the target's bucket
+    settles; ``alt`` / ``bidirectional`` / ``alt_bidirectional`` are the
+    goal-directed landmark modes (repro.landmarks, DESIGN.md §14) — all
+    four return bitwise-identical distances. ``None`` defers to the
+    plan's ``DeltaConfig.p2p_mode`` (tunable, see ``tune.tune_p2p``).
 
     >>> q = PointToPoint(source=0, target=42)
-    >>> (q.source, q.target)
-    (0, 42)
+    >>> (q.source, q.target, q.mode)
+    (0, 42, None)
     """
 
     source: int
     target: int
+    mode: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)

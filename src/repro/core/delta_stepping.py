@@ -57,6 +57,17 @@ from repro.graphs.structures import COOGraph, INF32
 
 _IMAX = jnp.int32(2**31 - 1)
 
+# PointToPoint answer modes (DESIGN.md §14): the classic early exit plus
+# the goal-directed landmark modes served by repro.landmarks.
+P2P_MODES = ("early_exit", "alt", "bidirectional", "alt_bidirectional")
+
+# Per-side clamp of the bidirectional meeting sums: tent values are
+# clipped to 2^30 - 1 before the int32-safe f + b addition. Exact
+# whenever finite point-to-point distances stay below 2^30 — a slightly
+# tighter form of the engine's existing no-overflow assumption (every
+# relaxation computes dist + w in int32).
+_MEET_CLIP = jnp.int32(2**30 - 1)
+
 
 @dataclasses.dataclass(frozen=True)
 class DeltaConfig:
@@ -83,6 +94,12 @@ class DeltaConfig:
     n_shards     — 'sharded_*' only: width of the 1-D device mesh the
                    relaxation is partitioned over (None = every local
                    device; DESIGN.md §9).
+    p2p_mode     — default answer mode of ``PointToPoint`` queries:
+                   'early_exit' (the classic settled-bucket exit),
+                   'alt' (goal-directed landmark potentials),
+                   'bidirectional' (forward+backward meeting rule) or
+                   'alt_bidirectional' (both; repro.landmarks,
+                   DESIGN.md §14). Queries can override per-call.
     """
 
     delta: int = 10
@@ -92,8 +109,11 @@ class DeltaConfig:
     interpret: bool = False
     grid_costs: Tuple[int, int] = (10, 14)
     n_shards: Optional[int] = None
+    p2p_mode: str = "early_exit"
 
     def __post_init__(self):
+        if self.p2p_mode not in P2P_MODES:
+            raise ValueError(f"unknown p2p_mode {self.p2p_mode!r}")
         if self.strategy not in ("edge", "ell", "pallas", "fused",
                                  "sharded_edge", "sharded_ell",
                                  "sharded_fused"):
@@ -154,23 +174,51 @@ def _run_many_seq(backend: RelaxBackend, sources, *, n: int, packed: bool):
         lambda s: _run_backend(backend, s, n=n, packed=packed), sources)
 
 
-@partial(jax.jit, static_argnames=("n", "packed"))
+def _pending_min(d, explored):
+    """Minimum tentative distance over *pending* vertices — those whose
+    tent improved since their edges were last relaxed (``tent <
+    explored``; an undiscovered vertex has tent == explored == INF and
+    is excluded). On an all-light backend every future tent assignment
+    derives from relaxing a pending vertex, so every future value is
+    >= this bound — the Dijkstra priority-queue minimum, recovered from
+    the Δ-stepping state."""
+    return jnp.where(d < explored, d, INF32).min()
+
+
+@partial(jax.jit, static_argnames=("n", "packed", "all_light"))
 def _run_one_p2p(backend: RelaxBackend, source, target, *, n: int,
-                 packed: bool):
+                 packed: bool, all_light: bool = False):
     """Jitted point-to-point driver with early exit (Kainer & Träff
     2019, DESIGN.md §10): when the outer loop advances past bucket i,
     every vertex whose tentative distance lies in a bucket <= i is
     settled — and the next-bucket scan is a global min over *all*
     finite tent values, so ``tent[target] // Δ < next_bucket`` proves
     the target's bucket was already processed and its distance is
-    final. ``target`` is a traced argument (no recompile per target)."""
+    final. ``target`` is a traced argument (no recompile per target).
+
+    ``all_light=True`` (the landmark ALT path, DESIGN.md §14) adds a
+    mid-bucket exit: once ``tent[target] <= min pending tent``, no
+    future relaxation can improve the target (weights >= 0, so every
+    future value is >= the pending minimum) — essential under tight
+    potentials, where the whole corridor collapses into bucket 0 and
+    the between-buckets test above never gets a chance to fire. Sound
+    only when every relaxed vertex has *all* its edges swept at once
+    (no deferred heavy phase), hence the all-light gate."""
     delta = backend.delta
 
-    def stop(tent, nxt):
+    def stop(tent, explored, nxt):
         d_t = _dist_of(tent, packed)[target]
         return (d_t < INF32) & ((d_t // delta) < nxt)
 
-    return _run_backend(backend, source, n=n, packed=packed, stop=stop)
+    inner_stop = None
+    if all_light:
+        def inner_stop(tent, explored):
+            d = _dist_of(tent, packed)
+            return (d[target] < INF32) & (d[target] <= _pending_min(
+                d, explored))
+
+    return _run_backend(backend, source, n=n, packed=packed, stop=stop,
+                        inner_stop=inner_stop)
 
 
 @partial(jax.jit, static_argnames=("n", "packed"))
@@ -190,6 +238,78 @@ def _run_one_warm(backend: RelaxBackend, tent0, explored0, *, n: int,
                         init=(tent0, explored0))
 
 
+@partial(jax.jit, static_argnames=("n", "packed", "all_light"))
+def _run_one_bidir(backend: RelaxBackend, tent0, explored0, *, n: int,
+                   packed: bool, all_light: bool = False):
+    """Jitted bidirectional point-to-point driver (repro.landmarks,
+    DESIGN.md §14). ``backend`` relaxes the disjoint union of the graph
+    with its reversed copy (``graphs.union_with_reverse``; ``n`` is the
+    union size ``2 * half``); ``tent0`` seeds *two* searches through the
+    warm-init hook — the source in the forward half and the target's
+    twin in the reversed half — so one lockstep bucket loop advances
+    both searches.
+
+    Meeting rule, layered on the ``_run_backend`` stop hooks: let
+    μ = min_v (tent[v] + tent[v + half]) over the half vertices — an
+    upper bound on dist(s, t) that becomes exact once some vertex on a
+    shortest path has exact tents on both sides.
+
+    * Generic backends stop between buckets when 2·nxt·Δ >= μ: every
+      unsettled vertex of either half has tent >= nxt·Δ, so a
+      hypothetical shorter path would need a vertex settled forward
+      whose successor y has forward distance >= nxt·Δ, forcing y's
+      backward distance below nxt·Δ — i.e. y settled backward and μ
+      already counts the shorter sum.
+    * ``all_light=True`` (the landmark path) sharpens this to the
+      classic bidirectional-Dijkstra rule μ <= L_f + L_b, where L_f/L_b
+      are the per-half *pending* minimums, checked mid-bucket too —
+      under tight ALT potentials both searches live entirely in bucket
+      0 and the bucket-granular test above never fires before the full
+      closure. Sound because all-light relaxation sweeps every edge of
+      a vertex the moment it leaves the pending set (DESIGN.md §14 has
+      the full argument).
+
+    The returned tent carries both half solutions; the caller extracts
+    μ = dist(s, t) and the meeting vertex host-side."""
+    half = n // 2
+    delta = backend.delta
+
+    def _mu(d):
+        f, b = d[:half], d[half:]
+        fin = (f < INF32) & (b < INF32)
+        sums = jnp.where(
+            fin, jnp.minimum(f, _MEET_CLIP) + jnp.minimum(b, _MEET_CLIP),
+            INF32)
+        return sums.min()
+
+    inner_stop = None
+    if all_light:
+        def meet(tent, explored):
+            d = _dist_of(tent, packed)
+            lf = _pending_min(d[:half], explored[:half])
+            lb = _pending_min(d[half:], explored[half:])
+            # clamping only lowers the threshold (never a premature
+            # stop); an exhausted side (L = INF -> clip) is genuinely
+            # final — its half of every sum is exact
+            bound = (jnp.minimum(lf, _MEET_CLIP)
+                     + jnp.minimum(lb, _MEET_CLIP))
+            mu = _mu(d)
+            return (mu < INF32) & (mu <= bound)
+
+        stop = lambda tent, explored, nxt: meet(tent, explored)  # noqa: E731
+        inner_stop = meet
+    else:
+        def stop(tent, explored, nxt):
+            mu = _mu(_dist_of(tent, packed))
+            # 2·nxt·Δ <= 2·max finite tent < 2^32: an int32 wrap can
+            # only go negative, which keeps the loop running (still
+            # exact, just no early exit) — never a premature stop
+            return (mu < INF32) & (2 * nxt * delta >= mu)
+
+    return _run_backend(backend, None, n=n, packed=packed, stop=stop,
+                        init=(tent0, explored0), inner_stop=inner_stop)
+
+
 @partial(jax.jit, static_argnames=("n", "packed"))
 def _run_one_bounded(backend: RelaxBackend, source, radius, *, n: int,
                      packed: bool):
@@ -199,22 +319,26 @@ def _run_one_bounded(backend: RelaxBackend, source, radius, *, n: int,
     beyond are upper bounds, not answers (the caller filters them)."""
     delta = backend.delta
 
-    def stop(tent, nxt):
+    def stop(tent, explored, nxt):
         return nxt > radius // delta
 
     return _run_backend(backend, source, n=n, packed=packed, stop=stop)
 
 
 def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool,
-                 stop=None, init=None):
+                 stop=None, init=None, inner_stop=None):
     """Outer/inner Δ-stepping loop (paper Alg. 1) over one backend.
     Returns ``(tent, outer_iters, inner_iters, overflow)``. ``stop``
     (trace-time constant) is an optional early-exit predicate
-    ``(tent, next_bucket) -> bool`` checked between buckets — the hook
-    the point-to-point and bounded-radius drivers hang off; ``None``
-    keeps the full-solve loop bit-for-bit unchanged. ``init`` is an
-    optional warm ``(tent0, explored0)`` state (the repro.dynamic repair
-    path, DESIGN.md §11); ``None`` is the cold all-INF start."""
+    ``(tent, explored, next_bucket) -> bool`` checked between buckets —
+    the hook the point-to-point and bounded-radius drivers hang off;
+    ``inner_stop`` is a ``(tent, explored) -> bool`` predicate checked
+    before every light sweep for exits that must fire *inside* a
+    bucket's closure (the all-light landmark drivers; its soundness
+    burden is the caller's). ``None`` for both keeps the full-solve
+    loop bit-for-bit unchanged. ``init`` is an optional warm
+    ``(tent0, explored0)`` state (the repro.dynamic repair path,
+    DESIGN.md §11); ``None`` is the cold all-INF start."""
     if init is None:
         tent0 = _init_tent(n, source, packed)
         explored0 = jnp.full((n,), INF32, jnp.int32)
@@ -229,7 +353,10 @@ def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool,
         f0, go0, _ = scan(tent, explored, i)
 
         def cond(c):
-            return c[6]
+            go = c[6]
+            if inner_stop is not None:
+                go = go & jnp.logical_not(inner_stop(c[0], c[1]))
+            return go
 
         def body(c):
             tent, explored, in_s, inner, over, f, _ = c
@@ -260,7 +387,10 @@ def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool,
         in_s0 = jnp.zeros((n,), bool)
 
         def cond(c):
-            return c[5]
+            go = c[5]
+            if inner_stop is not None:
+                go = go & jnp.logical_not(inner_stop(c[0], c[1]))
+            return go
 
         def body(c):
             tent, explored, in_s, inner, over, _ = c
@@ -290,7 +420,7 @@ def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool,
     def outer_cond(c):
         go = c[2] < _IMAX
         if stop is not None:
-            go = go & jnp.logical_not(stop(c[0], c[2]))
+            go = go & jnp.logical_not(stop(c[0], c[1], c[2]))
         return go
 
     i0 = jnp.zeros((), jnp.int32)  # relax(s, 0) puts the source in B_0

@@ -13,6 +13,7 @@ from repro.graphs.structures import (
     coo_to_csr,
     csr_to_ell,
     light_heavy_split,
+    union_with_reverse,
 )
 from repro.graphs.generators import (
     grid_map,
@@ -36,6 +37,7 @@ __all__ = [
     "coo_to_csr",
     "csr_to_ell",
     "light_heavy_split",
+    "union_with_reverse",
     "watts_strogatz",
     "rmat",
     "grid_map",

@@ -128,6 +128,28 @@ def csr_to_ell(g: CSRGraph, max_deg: int | None = None) -> ELLGraph:
     return ELLGraph(jnp.asarray(nbr), jnp.asarray(ww), n, max_deg)
 
 
+def union_with_reverse(g: COOGraph) -> COOGraph:
+    """Disjoint union of ``g`` with its edge-reversed copy: vertices
+    ``0..n-1`` carry the original graph, vertices ``n..2n-1`` carry the
+    reversed one (edge ``(u, v, w)`` also appears as ``(v+n, u+n, w)``).
+    The two halves share no edges, so one Δ-stepping solve seeded at
+    ``s`` (forward half) and ``t+n`` (reversed half) runs a forward and
+    a backward search in bucket lockstep — the substrate of the
+    bidirectional point-to-point modes (repro.landmarks, DESIGN.md §14).
+    Host-side preprocessing (numpy), weight-independent up to the shared
+    ``w`` array."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = np.asarray(g.w)
+    n = g.n_nodes
+    return COOGraph(
+        jnp.asarray(np.concatenate([src, dst + n]).astype(np.int32)),
+        jnp.asarray(np.concatenate([dst, src + n]).astype(np.int32)),
+        jnp.asarray(np.concatenate([w, w]).astype(np.int32)),
+        2 * n,
+    )
+
+
 def light_heavy_split(g: CSRGraph, delta: int) -> Tuple[CSRGraph, CSRGraph]:
     """Paper Alg. 1 lines 3–5: split outgoing edges into light (w <= Δ) and
     heavy (w > Δ) CSR structures. Host-side preprocessing; the edge-centric

@@ -23,7 +23,10 @@ the unified engine, composing with ``--sources`` batching and
 The single-host path routes through the Query/Plan façade
 (``repro.api``, DESIGN.md §10): one ``Engine.plan`` resolves tuning /
 strategy / caps, then queries dispatch on the plan — ``--target T``
-issues an early-exit ``PointToPoint`` query instead of the full solve.
+issues an early-exit ``PointToPoint`` query instead of the full solve,
+and ``--p2p-mode alt|bidirectional|alt_bidirectional`` upgrades it to
+goal-directed / bidirectional search over ``--landmarks K`` ALT tables
+(repro.landmarks, DESIGN.md §14).
 
 ``--tune`` replaces the hand-picked ``--delta``/``--strategy`` with the
 measured (Δ, backend, packing) search (repro.tune, DESIGN.md §7);
@@ -58,6 +61,15 @@ def main():
     ap.add_argument("--target", type=int, default=None,
                     help="point-to-point query: early-exit solve from "
                          "source 0 to this vertex (repro.api facade)")
+    ap.add_argument("--p2p-mode", default="early_exit",
+                    choices=["early_exit", "alt", "bidirectional",
+                             "alt_bidirectional"],
+                    help="--target search mode: goal-directed (alt*) "
+                         "and/or bidirectional Δ-stepping "
+                         "(repro.landmarks, DESIGN.md §14)")
+    ap.add_argument("--landmarks", type=int, default=None, metavar="K",
+                    help="ALT landmark count for --p2p-mode alt* "
+                         "(default 4)")
     ap.add_argument("--devices", type=int, default=0,
                     help="model-parallel width (0 = single-device engine)")
     ap.add_argument("--combine", default="reduce_scatter",
@@ -143,7 +155,13 @@ def main():
                   f"{resolve_n_shards(cfg.n_shards)} device(s)")
         if args.target is not None:
             from repro.api import PointToPoint
-            q = PointToPoint(sources[0], args.target)
+            mode = args.p2p_mode
+            if mode != "early_exit":
+                t0 = time.perf_counter()
+                plan.prepare_landmarks(k=args.landmarks or 4)
+                print(f"[sssp] landmarks: k={plan.landmark_tables.k} "
+                      f"({time.perf_counter() - t0:.1f}s to preprocess)")
+            q = PointToPoint(sources[0], args.target, mode=mode)
             plan.solve(q)                       # warm up / compile
             t0 = time.perf_counter()
             r = plan.solve(q)
@@ -151,7 +169,7 @@ def main():
             hops = 0 if r.path is None else len(r.path) - 1
             print(f"[sssp] p2p {sources[0]}->{args.target}: "
                   f"dist={r.distance} hops={hops} "
-                  f"buckets={int(r.telemetry.buckets)} (early exit), "
+                  f"buckets={int(r.telemetry.buckets)} ({mode}), "
                   f"{dt * 1e3:.1f} ms")
             if args.verify:
                 from repro.core import dijkstra

@@ -68,12 +68,23 @@ from repro.api import (
     UpdateRefused,
     extract_path,
 )
+from repro.core.delta_stepping import P2P_MODES
 from repro.graphs.structures import INF32
 
 # query kinds that occupy exactly one multi-source lane each; anything
 # else runs as a solo batch through the plan's own dispatch
 _LANE_KINDS = (SingleSource, PointToPoint, BoundedRadius)
 _QUERY_KINDS = _LANE_KINDS + (MultiSource, ManyToMany, UpdateBatch)
+
+
+def _lane_able(query) -> bool:
+    """Lane batches answer PointToPoint from a full single-source lane
+    — correct, but it would silently ignore an explicitly requested
+    goal-directed mode (repro.landmarks), so mode-carrying queries run
+    solo through the plan's own dispatch instead."""
+    if not isinstance(query, _LANE_KINDS):
+        return False
+    return not (isinstance(query, PointToPoint) and query.mode is not None)
 
 # bounded ring of completed-request latencies backing stats()'s
 # percentiles — enough for a load sweep, O(1) memory under sustained
@@ -212,6 +223,7 @@ class Server:
         max_resident: Optional[int] = None,
         max_queue: int = 256,
         clock: Callable[[], float] = time.monotonic,
+        landmarks=None,
     ):
         if lane_width < 1:
             raise ValueError(f"lane_width must be >= 1, got {lane_width}")
@@ -222,6 +234,14 @@ class Server:
         self.max_queue = int(max_queue)
         self._config = config
         self._tuning = tuning
+        # landmark residency knob (repro.landmarks): Plan.prepare_landmarks
+        # kwargs (or an int k) applied lazily to every tenant plan — the
+        # table precompute itself runs on a tenant's first landmark-mode
+        # query, so tenants that never ask for goal-directed point-to-
+        # point never pay for it
+        if isinstance(landmarks, int):
+            landmarks = {"k": landmarks}
+        self._landmarks = landmarks
         self._clock = clock
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
@@ -293,6 +313,8 @@ class Server:
                 free_mask=tenant.free_mask,
                 tuning=self._tuning,
             ).plan(fallback=True)
+            if self._landmarks is not None:
+                tenant.plan.prepare_landmarks(**self._landmarks, build=False)
             self._plans_built += 1
             self._evict_locked(keep=tenant)
         return tenant.plan
@@ -365,6 +387,9 @@ class Server:
             return f"source {query.source} out of range for {n} vertices"
         if isinstance(query, PointToPoint) and not 0 <= int(query.target) < n:
             return f"target {query.target} out of range for {n} vertices"
+        if (isinstance(query, PointToPoint) and query.mode is not None
+                and query.mode not in P2P_MODES):
+            return f"unknown p2p mode {query.mode!r} (known: {P2P_MODES})"
         if isinstance(query, BoundedRadius) and not (
             0 <= int(query.radius) < int(INF32)
         ):
@@ -409,10 +434,10 @@ class Server:
             while tenant.queue and isinstance(tenant.queue[0].query,
                                               UpdateBatch):
                 items.append(tenant.queue.popleft())
-        elif isinstance(head.query, _LANE_KINDS):
+        elif _lane_able(head.query):
             kind, items = "lanes", []
             while (tenant.queue and len(items) < self.lane_width
-                   and isinstance(tenant.queue[0].query, _LANE_KINDS)):
+                   and _lane_able(tenant.queue[0].query)):
                 items.append(tenant.queue.popleft())
         else:
             kind, items = "solo", [tenant.queue.popleft()]

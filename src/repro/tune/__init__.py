@@ -38,6 +38,7 @@ from repro.tune.search import (
     resolve_config,
     resolve_record,
     tune,
+    tune_p2p,
 )
 
 __all__ = [
@@ -54,4 +55,5 @@ __all__ = [
     "resolve_config",
     "resolve_record",
     "tune",
+    "tune_p2p",
 ]

@@ -69,10 +69,14 @@ class TuningRecord:
     us_per_solve: Optional[float] = None
     trials: Tuple[Tuple[int, str, int, float], ...] = ()
     n_shards: Optional[int] = None
+    # query-time axis (repro.landmarks): the measured point-to-point
+    # algorithm choice of tune_p2p; None = never measured (early_exit)
+    p2p_mode: Optional[str] = None
 
     def to_config(self, base: Optional[DeltaConfig] = None) -> DeltaConfig:
-        """Concrete engine config: tuned (Δ, strategy, cap, mesh shape)
-        over the caller's base for everything else (pred_mode, ...)."""
+        """Concrete engine config: tuned (Δ, strategy, cap, mesh shape,
+        p2p mode) over the caller's base for everything else
+        (pred_mode, ...)."""
         base = base if base is not None else DeltaConfig()
         return dataclasses.replace(
             base,
@@ -80,6 +84,7 @@ class TuningRecord:
             strategy=self.strategy,
             frontier_cap=self.frontier_cap,
             n_shards=self.n_shards if self.n_shards is not None else base.n_shards,
+            p2p_mode=self.p2p_mode if self.p2p_mode is not None else base.p2p_mode,
         )
 
     def to_json(self) -> dict:
@@ -92,6 +97,7 @@ class TuningRecord:
             "us_per_solve": self.us_per_solve,
             "trials": [list(t) for t in self.trials],
             "n_shards": self.n_shards,
+            "p2p_mode": self.p2p_mode,
         }
 
     @classmethod
@@ -110,6 +116,7 @@ class TuningRecord:
                 for a, b, c, t in d.get("trials", [])
             ),
             n_shards=(None if d.get("n_shards") is None else int(d["n_shards"])),
+            p2p_mode=d.get("p2p_mode"),
         )
 
 
@@ -448,3 +455,85 @@ def resolve_config(
         sources=sources,
     )
     return cfg
+
+
+def tune_p2p(
+    graph: COOGraph,
+    record: Optional[TuningRecord] = None,
+    *,
+    pairs: Optional[Sequence[Tuple[int, int]]] = None,
+    modes: Optional[Sequence[str]] = None,
+    reps: int = 3,
+    landmarks: Optional[dict] = None,
+    free_mask=None,
+    cache=None,
+    measure_fn=None,
+) -> TuningRecord:
+    """Measured query-time search over the point-to-point algorithm
+    (``DeltaConfig.p2p_mode``, DESIGN.md §14): times each candidate mode
+    on representative ``pairs`` through a real Plan and records the
+    winner on the tuning record, so cached workloads pick their p2p
+    algorithm the same way they pick (Δ, strategy, cap).
+
+    ``record`` is the operating point to extend (default: the
+    zero-measurement heuristic record); ``modes=None`` searches
+    ``early_exit`` plus — on canonical (w >= 1) graphs — the three
+    landmark modes; ``landmarks`` are ``Plan.prepare_landmarks`` kwargs
+    (table precompute runs once, before the clock starts — ALT query
+    time is what is being measured, exactly the preprocessing/query
+    split of the goal-directed literature). ``cache`` (a ``TuningCache``
+    or path) persists the extended record under the same fingerprint.
+    ``measure_fn(mode) -> seconds`` overrides the timing primitive
+    (tests inject deterministic costs). Every mode returns bitwise-equal
+    distances, so — like the rest of the tuner — this only ever moves
+    time, not answers.
+    """
+    from repro.api import Engine, PointToPoint  # lazy: api builds on tune
+    from repro.core.backends import graph_is_canonical
+
+    if record is None:
+        record = heuristic_record(graph)
+    base = record.to_config(DeltaConfig(pred_mode="none"))
+    if modes is None:
+        modes = ("early_exit",)
+        if graph_is_canonical(graph):
+            from repro.landmarks import LANDMARK_MODES
+
+            modes = modes + LANDMARK_MODES
+    n = graph.n_nodes
+    if pairs is None:
+        rng = np.random.default_rng(0)
+        pairs = tuple(
+            (int(rng.integers(n)), int(rng.integers(n))) for _ in range(4)
+        )
+    plan = Engine(graph, base, free_mask=free_mask).plan()
+    if landmarks:
+        plan.prepare_landmarks(**landmarks)
+    best_mode, best_t = None, None
+    for mode in modes:
+        if measure_fn is not None:
+            elapsed = float(measure_fn(mode))
+        else:
+
+            def run(m=mode):
+                for s, t in pairs:
+                    plan.solve(PointToPoint(s, t, mode=m))
+
+            run()  # compile warm-up (and lazy table build) off the clock
+            elapsed = None
+            for _ in range(max(1, reps)):
+                t0 = time.perf_counter()
+                run()
+                dt = time.perf_counter() - t0
+                elapsed = dt if elapsed is None else min(elapsed, dt)
+        if best_t is None or elapsed < best_t:
+            best_mode, best_t = mode, elapsed
+    record = dataclasses.replace(record, p2p_mode=best_mode)
+    if cache is not None:
+        if isinstance(cache, str):
+            from repro.tune.cache import TuningCache
+
+            cache = TuningCache(cache)
+        cache.put(record)
+        cache.save()
+    return record

@@ -1,0 +1,419 @@
+"""The ALT goal-directed query subsystem (repro.landmarks, DESIGN.md
+§14): landmark selection + distance tables, admissible potentials
+(reduced costs >= 0), bidirectional Δ-stepping with the meeting-rule
+stop, and the Plan/Server/tuner wiring around them.
+
+The acceptance pin is bitwise distance equality: every landmark mode
+(``alt``, ``bidirectional``, ``alt_bidirectional``) must answer exactly
+what the early-exit unidirectional solve and the heap-Dijkstra oracle
+answer — goal direction may only change *how fast* the answer arrives,
+never the answer. Invalidation is the other contract: after a weight
+batch that decreases any edge below its table-build value, stale tables
+must never serve (``recompute`` drops + lazily rebuilds; ``refuse``
+rejects the batch before any weight is applied)."""
+import numpy as np
+import pytest
+
+from _property_driver import ALL_STRATEGIES
+from repro.api import (
+    Engine,
+    LandmarkRefused,
+    PointToPoint,
+    UpdateRefused,
+    stitch_bidirectional_path,
+)
+from repro.core import DeltaConfig, dijkstra, walk_pred_tree
+from repro.core.delta_stepping import P2P_MODES
+from repro.graphs import random_graph, square_lattice, watts_strogatz
+from repro.graphs.structures import INF32
+from repro.landmarks import (
+    LANDMARK_MODES,
+    LandmarkSpec,
+    LandmarkState,
+    LandmarkStore,
+    build_tables,
+    graph_whash,
+    potentials,
+    reduce_forward,
+    reduce_union,
+    select_landmarks,
+)
+from repro.graphs.structures import coo_to_csr, csr_to_ell, union_with_reverse
+
+INF = int(INF32)
+
+
+def _edge_weights(g):
+    w = {}
+    for u, v, c in zip(np.asarray(g.src), np.asarray(g.dst),
+                       np.asarray(g.w)):
+        key = (int(u), int(v))
+        w[key] = min(w[key], int(c)) if key in w else int(c)
+    return w
+
+
+def _check_path(g, path, source, target, distance):
+    """Endpoint + edge-existence + exact-cost validation of one path."""
+    assert path[0] == source and path[-1] == target
+    assert len(set(path)) == len(path)          # simple (cycle guard)
+    ew = _edge_weights(g)
+    acc = 0
+    for a, b in zip(path, path[1:]):
+        assert (a, b) in ew, (a, b)
+        acc += ew[(a, b)]
+    assert acc == distance
+
+
+def _path_as_pred_tree(g, path, distance):
+    """Re-express a stitched path as a one-chain pred tree and run the
+    *existing* walk_pred_tree oracle over it — the stitched output must
+    satisfy the same global invariant as a full solve's tree."""
+    n = g.n_nodes
+    pred = np.full(n, -1, np.int32)
+    dist = np.full(n, INF, np.int64)
+    ew = _edge_weights(g)
+    acc = 0
+    dist[path[0]] = 0
+    for a, b in zip(path, path[1:]):
+        acc += ew[(a, b)]
+        pred[b] = a
+        dist[b] = acc
+    assert acc == distance
+    return walk_pred_tree(g, path[0], dist, pred)
+
+
+GRAPHS = {
+    "lattice": lambda: square_lattice(14, weighted=True, seed=3),
+    "smallworld": lambda: watts_strogatz(180, 6, 0.05, seed=7),
+    "random": lambda: random_graph(150, 900, seed=2),
+}
+
+
+# ---------------------------------------------------------------------------
+# potentials: admissibility as reduced-cost nonnegativity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(GRAPHS))
+def test_reduced_costs_nonnegative(family):
+    """π from the landmark tables must be *consistent*: every finite
+    reduced cost w + π(v) − π(u) >= 0, on the forward graph and on both
+    halves of the forward∪reverse union — this is the entire correctness
+    argument for running Δ-stepping on the reweighted graph
+    (DESIGN.md §14)."""
+    import jax.numpy as jnp
+
+    g = GRAPHS[family]()
+    tables = build_tables(g, k=4, delta=10)
+    fwd = csr_to_ell(coo_to_csr(g))
+    uni = csr_to_ell(coo_to_csr(union_with_reverse(g)))
+    for target in (0, g.n_nodes // 2, g.n_nodes - 1):
+        pi = potentials(tables, target)
+        assert pi[target] == 0                  # the goal has zero slack
+        pi32 = jnp.asarray(pi.astype(np.int32))
+        wf = np.asarray(reduce_forward(fwd.w, fwd.nbr, pi32, g.n_nodes))
+        assert (wf[np.asarray(fwd.w) < INF] >= 0).all()
+        wu = np.asarray(reduce_union(uni.w, uni.nbr, pi32, g.n_nodes))
+        assert (wu[np.asarray(uni.w) < INF] >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# the acceptance pin: every mode, bitwise vs early-exit and Dijkstra
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", sorted(GRAPHS))
+def test_all_modes_bitwise_equal_distances(family):
+    g = GRAPHS[family]()
+    plan = Engine(g, DeltaConfig(delta=10, pred_mode="argmin")).plan()
+    targets = [1, g.n_nodes // 3, g.n_nodes - 1]
+    dref, _ = dijkstra(g, 0)
+    for t in targets:
+        base = plan.solve(PointToPoint(0, t))   # early-exit reference
+        assert base.distance == int(dref[t])
+        for mode in LANDMARK_MODES:
+            r = plan.solve(PointToPoint(0, t, mode=mode))
+            assert r.distance == base.distance, (family, mode, t)
+            if r.distance < INF:
+                _check_path(g, r.path, 0, t, r.distance)
+                assert _path_as_pred_tree(g, r.path, r.distance), \
+                    (family, mode, t)
+            else:
+                assert r.path is None
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_modes_match_oracle_across_backends(strategy):
+    """The landmark query path rides along every plan strategy — the
+    mode axis must stay bitwise-correct regardless of which relaxation
+    backend the plan itself resolved to."""
+    g = random_graph(80, 400, seed=4)
+    cfg = DeltaConfig(delta=8, strategy=strategy, pred_mode="argmin",
+                      interpret=True)
+    plan = Engine(g, cfg).plan()
+    dref, _ = dijkstra(g, 0)
+    for mode in P2P_MODES:
+        r = plan.solve(PointToPoint(0, g.n_nodes - 1, mode=mode))
+        assert r.distance == int(dref[g.n_nodes - 1]), (strategy, mode)
+
+
+def test_unreachable_target_every_mode():
+    g = random_graph(60, 90, seed=5)            # sparse: isolated tail
+    dref, _ = dijkstra(g, 0)
+    far = int(np.argmax(dref))                  # an INF vertex
+    assert dref[far] >= INF
+    plan = Engine(g, DeltaConfig(delta=8, pred_mode="argmin")).plan()
+    for mode in P2P_MODES:
+        r = plan.solve(PointToPoint(0, far, mode=mode))
+        assert r.distance == INF and r.path is None, mode
+
+
+def test_source_equals_target_every_mode():
+    g = square_lattice(8, weighted=True, seed=1)
+    plan = Engine(g, DeltaConfig(delta=10, pred_mode="argmin")).plan()
+    for mode in P2P_MODES:
+        r = plan.solve(PointToPoint(5, 5, mode=mode))
+        assert r.distance == 0 and r.path == [5], mode
+
+
+def test_landmark_modes_require_canonical_weights():
+    """Zero-weight edges break the path-recovery walk; the landmark
+    modes must refuse them up front rather than mis-answer."""
+    g = random_graph(40, 120, seed=0)
+    w = np.asarray(g.w).copy()
+    w[0] = 0
+    bad = type(g)(src=g.src, dst=g.dst, w=w.astype(np.int32),
+                  n_nodes=g.n_nodes)
+    plan = Engine(bad, DeltaConfig(delta=8, pred_mode="argmin")).plan()
+    with pytest.raises(ValueError, match="canonical"):
+        plan.solve(PointToPoint(0, 10, mode="alt"))
+
+
+def test_bad_mode_rejected():
+    g = square_lattice(6, weighted=True)
+    plan = Engine(g, DeltaConfig(delta=10)).plan()
+    with pytest.raises(ValueError, match="p2p"):
+        plan.solve(PointToPoint(0, 5, mode="astar"))
+    with pytest.raises(ValueError):
+        DeltaConfig(delta=10, p2p_mode="astar")
+
+
+# ---------------------------------------------------------------------------
+# stitch_bidirectional_path: the meeting-point fix (satellite)
+# ---------------------------------------------------------------------------
+
+def test_stitch_direct_regression():
+    """pred_f is rooted at source, pred_b at target over the *reversed*
+    edges; stitching joins them at the meeting vertex without repeating
+    it."""
+    pf = np.array([-1, 0, 1, -1], np.int32)     # 0 -> 1 -> 2
+    pb = np.array([-1, -1, 3, -1], np.int32)    # 3 -> 2 (backward tree)
+    assert stitch_bidirectional_path(pf, pb, 0, 3, 2, 4) == [0, 1, 2, 3]
+    # meet == target: the backward half is the trivial [target]
+    assert stitch_bidirectional_path(pf, pb, 0, 3, 3, 4) is None  # pf[3]=-1
+    pf2 = np.array([-1, 0, 1, 2], np.int32)
+    assert stitch_bidirectional_path(pf2, pb, 0, 3, 3, 4) == [0, 1, 2, 3]
+    # meet == source: the forward half is the trivial [source]
+    pb2 = np.array([1, 2, 3, -1], np.int32)     # chain back to 3
+    assert stitch_bidirectional_path(pf, pb2, 0, 3, 0, 4) == [0, 1, 2, 3]
+
+
+def test_stitch_cycle_guard_and_broken_chains():
+    pf = np.array([-1, 2, 1, -1], np.int32)     # 1 <-> 2 cycle
+    pb = np.array([-1, -1, 3, -1], np.int32)
+    assert stitch_bidirectional_path(pf, pb, 0, 3, 2, 4) is None
+    # backward cycle
+    pf_ok = np.array([-1, 0, 1, -1], np.int32)
+    pb_cyc = np.array([-1, -1, 2, -1], np.int32)  # 2 -> itself
+    assert stitch_bidirectional_path(pf_ok, pb_cyc, 0, 3, 2, 4) is None
+    # backward chain rooted at the wrong vertex
+    pb_wrong = np.array([-1, -1, 1, -1], np.int32)
+    assert stitch_bidirectional_path(pf_ok, pb_wrong, 0, 3, 2, 4) is None
+
+
+def test_stitched_paths_pass_walk_oracle_many_pairs():
+    g = random_graph(120, 700, seed=9)
+    plan = Engine(g, DeltaConfig(delta=8, pred_mode="argmin")).plan()
+    dref, _ = dijkstra(g, 3)
+    rng = np.random.default_rng(0)
+    for t in rng.integers(0, g.n_nodes, size=6):
+        t = int(t)
+        for mode in ("bidirectional", "alt_bidirectional"):
+            r = plan.solve(PointToPoint(3, t, mode=mode))
+            assert r.distance == int(min(dref[t], INF)), (mode, t)
+            if r.distance < INF and t != 3:
+                _check_path(g, r.path, 3, t, r.distance)
+                assert _path_as_pred_tree(g, r.path, r.distance), (mode, t)
+
+
+# ---------------------------------------------------------------------------
+# invalidation under Plan.update (satellite): stale tables never serve
+# ---------------------------------------------------------------------------
+
+def _inc_dec_batches(g):
+    """One increase-only batch and one decreasing batch on the heaviest
+    edge (random_graph weights span [1, 20], so a decrease exists)."""
+    w = np.asarray(g.w)
+    eid = int(np.argmax(w))
+    return (np.array([eid]), np.array([int(w[eid]) + 5]),
+            np.array([eid]), np.array([1]))
+
+
+@pytest.mark.parametrize("strategy", ALL_STRATEGIES)
+def test_update_invalidation_recompute(strategy):
+    g = random_graph(100, 500, seed=2)
+    cfg = DeltaConfig(delta=8, strategy=strategy, pred_mode="argmin",
+                      interpret=True)
+    plan = Engine(g, cfg).plan().prepare_landmarks(k=3)
+    t = g.n_nodes - 1
+    assert plan.solve(PointToPoint(0, t, mode="alt")).distance == \
+        int(dijkstra(g, 0)[0][t])
+    tables0 = plan.landmark_tables
+    inc_ids, inc_w, dec_ids, dec_w = _inc_dec_batches(g)
+
+    plan.update(inc_ids, inc_w)                 # increase-only: kept
+    assert plan.landmark_tables is tables0, strategy
+    d1 = int(dijkstra(plan.graph, 0)[0][t])
+    assert plan.solve(PointToPoint(0, t, mode="alt")).distance == d1
+
+    plan.update(dec_ids, dec_w)                 # decrease: stale -> drop
+    assert plan.landmark_tables is None, strategy
+    d2 = int(dijkstra(plan.graph, 0)[0][t])
+    for mode in LANDMARK_MODES:                 # lazy rebuild, fresh answer
+        assert plan.solve(PointToPoint(0, t, mode=mode)).distance == d2, \
+            (strategy, mode)
+    assert plan.landmark_tables is not None
+
+
+def test_update_invalidation_refuse():
+    g = random_graph(100, 500, seed=2)
+    plan = Engine(g, DeltaConfig(delta=8, pred_mode="argmin")).plan()
+    plan.prepare_landmarks(k=3, on_update="refuse")
+    w_before = np.asarray(plan.graph.w).copy()
+    inc_ids, inc_w, dec_ids, dec_w = _inc_dec_batches(g)
+
+    plan.update(inc_ids, inc_w)                 # increases pass through
+    with pytest.raises(LandmarkRefused) as ei:
+        plan.update(dec_ids, dec_w)
+    assert ei.value.reason == "landmarks_stale"
+    assert isinstance(ei.value, UpdateRefused)  # sheds on the typed path
+    # refusal happened BEFORE any weight applied
+    w_after = np.asarray(plan.graph.w)
+    assert int(w_after[dec_ids[0]]) == int(w_before[dec_ids[0]]) + 5
+    t = g.n_nodes - 1
+    assert plan.solve(PointToPoint(0, t, mode="alt")).distance == \
+        int(dijkstra(plan.graph, 0)[0][t])
+
+
+# ---------------------------------------------------------------------------
+# selection + store
+# ---------------------------------------------------------------------------
+
+def test_selection_deterministic_and_valid():
+    g = watts_strogatz(150, 6, 0.05, seed=1)
+    for strat in ("farthest", "random"):
+        a, a_out, a_in = select_landmarks(g, 5, strategy=strat, seed=3)
+        b, b_out, b_in = select_landmarks(g, 5, strategy=strat, seed=3)
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(a_out, b_out)
+        np.testing.assert_array_equal(a_in, b_in)
+        assert len(np.unique(a)) == 5
+        assert (a >= 0).all() and (a < g.n_nodes).all()
+        assert list(a) == sorted(a)             # canonical order
+    assert not np.array_equal(
+        select_landmarks(g, 5, strategy="farthest", seed=3)[0],
+        select_landmarks(g, 5, strategy="random", seed=3)[0])
+
+
+def test_tables_rows_match_full_solves():
+    """d_out rows are distances FROM each landmark, d_in rows distances
+    TO it — both bitwise against the oracle on graph and reverse."""
+    g = random_graph(80, 400, seed=6)
+    tb = build_tables(g, k=3, delta=8)
+    rev = g.reversed() if hasattr(g, "reversed") else None
+    for j, lm in enumerate(tb.landmarks):
+        np.testing.assert_array_equal(tb.d_out[j], dijkstra(g, int(lm))[0])
+        if rev is not None:
+            np.testing.assert_array_equal(
+                tb.d_in[j], dijkstra(rev, int(lm))[0])
+
+
+def test_store_roundtrip_and_corruption(tmp_path):
+    g = random_graph(60, 300, seed=8)
+    spec = LandmarkSpec(k=3, store=str(tmp_path))
+    st1 = LandmarkState(spec, 8)
+    tb = st1.ensure_tables(g)
+    files = list(tmp_path.glob("landmarks_*.npz"))
+    assert len(files) == 1
+    # a second state over the same store hits persistently
+    st2 = LandmarkState(spec, 8)
+    hit = st2.ensure_tables(g)
+    np.testing.assert_array_equal(hit.landmarks, tb.landmarks)
+    np.testing.assert_array_equal(hit.d_out, tb.d_out)
+    np.testing.assert_array_equal(hit.d_in, tb.d_in)
+    assert hit.whash == graph_whash(g)
+    # corruption is a miss, never a crash or a wrong answer
+    files[0].write_bytes(b"not an npz")
+    store = LandmarkStore(str(tmp_path))
+    assert store.get(tb.fingerprint, tb.whash, 3, "farthest", 0) is None
+    st3 = LandmarkState(spec, 8)
+    rebuilt = st3.ensure_tables(g)              # rebuilds through the miss
+    np.testing.assert_array_equal(rebuilt.d_out, tb.d_out)
+
+
+def test_store_is_weight_keyed():
+    """Same fingerprint bucket, different weights -> different tables:
+    the whash term must keep them apart (tables move *answers*)."""
+    g = random_graph(60, 300, seed=8)
+    w2 = np.asarray(g.w).copy()
+    w2[0] += 1
+    g2 = type(g)(src=g.src, dst=g.dst, w=w2.astype(np.int32),
+                 n_nodes=g.n_nodes)
+    assert graph_whash(g) != graph_whash(g2)
+
+
+# ---------------------------------------------------------------------------
+# tuner + server wiring
+# ---------------------------------------------------------------------------
+
+def test_tune_p2p_picks_injected_winner(tmp_path):
+    from repro.tune import TuningCache, tune_p2p
+
+    g = square_lattice(10, weighted=True, seed=2)
+    costs = {"early_exit": 3.0, "alt": 2.0, "bidirectional": 1.5,
+             "alt_bidirectional": 0.5}
+    rec = tune_p2p(g, measure_fn=lambda mode: costs[mode],
+                   cache=str(tmp_path / "tune.json"))
+    assert rec.p2p_mode == "alt_bidirectional"
+    cfg = rec.to_config(DeltaConfig(delta=10))
+    assert cfg.p2p_mode == "alt_bidirectional"
+    # round-trips through the persistent cache
+    cached = TuningCache(str(tmp_path / "tune.json"))
+    hit = cached.get(rec.fingerprint)
+    assert hit is not None and hit.p2p_mode == "alt_bidirectional"
+
+
+def test_server_explicit_mode_runs_solo_and_matches(monkeypatch=None):
+    from repro.serve import Server
+
+    g = watts_strogatz(150, 6, 0.05, seed=4)
+    dref, _ = dijkstra(g, 0)
+    cfg = DeltaConfig(delta=10, pred_mode="argmin")
+    with Server({"g": g}, config=cfg, lane_width=3, landmarks=2) as srv:
+        t1 = srv.submit(PointToPoint(0, 40, mode="alt_bidirectional"),
+                        graph="g")
+        t2 = srv.submit(PointToPoint(0, 77), graph="g")
+        r1, r2 = t1.result(timeout=300), t2.result(timeout=300)
+    assert r1.distance == int(dref[40])
+    assert r2.distance == int(dref[77])
+    stats = srv.stats()
+    assert stats["batches"]["solo"] >= 1        # explicit mode: solo batch
+
+
+def test_server_rejects_bogus_mode():
+    from repro.serve import RequestRejected, Server
+
+    g = square_lattice(8, weighted=True)
+    with Server({"g": g}, config=DeltaConfig(delta=10),
+                lane_width=2) as srv:
+        t = srv.submit(PointToPoint(0, 5, mode="astar"), graph="g")
+        exc = t.exception(30)
+    assert isinstance(exc, RequestRejected) and exc.reason == "invalid"

@@ -31,7 +31,9 @@ API_EXPORTS = {
     "Tuning",
     "UpdateBatch",
     "UpdateRefused",
+    "LandmarkRefused",
     "extract_path",
+    "stitch_bidirectional_path",
 }
 
 # the async serving tier (DESIGN.md §13)
@@ -45,7 +47,7 @@ SERVE_DEPRECATED = {"SSSPServer", "SSSPQuery"}
 
 # the tuning surface the façade resolves through
 TUNE_REQUIRED = {"resolve_record", "resolve_config", "build_safe_solver",
-                 "TuningRecord", "TuningCache", "tune"}
+                 "TuningRecord", "TuningCache", "tune", "tune_p2p"}
 
 
 def test_api_export_snapshot():
@@ -64,7 +66,7 @@ def test_server_surface():
     """The serving tier's load-bearing signatures (DESIGN.md §13)."""
     assert list(inspect.signature(serve.Server.__init__).parameters) == [
         "self", "graphs", "config", "tuning", "lane_width", "max_resident",
-        "max_queue", "clock"]
+        "max_queue", "clock", "landmarks"]
     assert list(inspect.signature(serve.Server.submit).parameters) == [
         "self", "query", "graph", "deadline"]
     assert list(inspect.signature(serve.Server.admit).parameters) == [
@@ -126,7 +128,8 @@ def test_engine_and_plan_surface():
                  jnp.array([3], jnp.int32), 2)
     plan = api.Engine(g, core.DeltaConfig(delta=4)).plan()
     for attr in ("config", "graph", "backend", "record", "solve",
-                 "explain", "update", "resolve"):
+                 "explain", "update", "resolve", "prepare_landmarks",
+                 "landmark_tables"):
         assert hasattr(plan, attr), attr
     assert list(inspect.signature(api.Plan.update).parameters) == [
         "self", "edge_ids", "new_weights"]
@@ -142,7 +145,7 @@ def test_query_algebra_fields():
     assert [f for f in api.SingleSource.__dataclass_fields__] == ["source"]
     assert [f for f in api.MultiSource.__dataclass_fields__] == ["sources"]
     assert [f for f in api.PointToPoint.__dataclass_fields__] == [
-        "source", "target"]
+        "source", "target", "mode"]
     assert [f for f in api.BoundedRadius.__dataclass_fields__] == [
         "source", "radius"]
     assert [f for f in api.ManyToMany.__dataclass_fields__] == [
