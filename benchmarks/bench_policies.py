@@ -1,0 +1,90 @@
+"""Frontier-policy family sweep (DESIGN.md §15): ρ-stepping and
+radius-stepping vs measured-tuned Δ-stepping, per graph family.
+
+The policy axis trades round structure against per-round sweep cost.
+The headline: on the paper's small-world family, ρ-stepping with a
+small batch (ρ ≈ |V|/64) keeps every frontier inside a tight compaction
+cap (3ρ) that Δ-stepping's wide buckets cannot use — the gated
+``rho`` row's derived column records the speedup over the tuned
+Δ-stepping reference. On R-MAT the hub structure favors Δ's one-bucket
+schedule and Δ-stepping stays ahead; the sweep records that honestly.
+
+Rows: ``delta_tuned`` (the delta-only measured search — the reference),
+``rho`` / ``radius`` (hand-picked policy operating points, gated),
+``auto`` (the full-axis search including policies — which policy the
+tuner itself picks; tuner-chosen rows are informational, gate=False).
+"""
+from __future__ import annotations
+
+from benchmarks.common import row, scaled, time_fn
+from repro.api import Engine, SingleSource
+from repro.core import DeltaConfig
+
+
+def _plan_for(g, cfg):
+    plan = Engine(g, cfg).plan()
+    t = time_fn(lambda: plan.solve(SingleSource(0)).dist, reps=3)
+    res = plan.solve(SingleSource(0))
+    assert not bool(res.telemetry.overflow), cfg
+    return t, res
+
+
+def main():
+    from repro.graphs import rmat, watts_strogatz
+    from repro.tune import tune
+
+    n_ws = scaled(16_000)
+    n_rm = scaled(16_000)
+    families = {
+        "smallworld": (watts_strogatz(n_ws, 12, 1e-2, seed=0),
+                       "ell", True),
+        # ELL padding explodes on R-MAT hubs: policies ride 'edge', and
+        # the compaction cap does not apply (edge has no compaction)
+        "rmat": (rmat(n_rm, 12 * n_rm, seed=0), "edge", False),
+    }
+    for fam, (g, strat, capped) in families.items():
+        n = g.n_nodes
+        base = DeltaConfig(pred_mode="none")
+        # the Δ-stepping reference: measured search over the classic
+        # (Δ, backend, cap) space only — the policy axis held out
+        rec = tune(g, base, policies=("delta",))
+        t_delta, _ = _plan_for(g, rec.to_config(base))
+        cap = "none" if rec.frontier_cap is None else rec.frontier_cap
+        row(f"policies/{fam}/delta_tuned", t_delta,
+            f"delta={rec.delta};strategy={rec.strategy};cap={cap}",
+            gate=False)
+
+        # ρ-stepping at a batch small enough that every value-closed
+        # round fits a 3ρ compaction cap (small-world; edge on rmat)
+        rho = max(128, n // 64)
+        cfg = DeltaConfig(pred_mode="none", strategy=strat, delta=10,
+                          policy="rho", rho=rho,
+                          frontier_cap=min(n, 3 * rho) if capped else None)
+        t_rho, res = _plan_for(g, cfg)
+        row(f"policies/{fam}/rho", t_rho,
+            f"rho={rho};strategy={strat};"
+            f"rounds={int(res.telemetry.buckets)};"
+            f"speedup_vs_delta_tuned={t_delta / t_rho:.2f}")
+
+        # radius-stepping: k-th-out-weight radii, full-width frontier
+        cfg = DeltaConfig(pred_mode="none", strategy=strat, delta=10,
+                          policy="radius", radius_k=4)
+        t_rad, res = _plan_for(g, cfg)
+        row(f"policies/{fam}/radius", t_rad,
+            f"radius_k=4;strategy={strat};"
+            f"rounds={int(res.telemetry.buckets)};"
+            f"speedup_vs_delta_tuned={t_delta / t_rad:.2f}")
+
+        # the full-axis search: (Δ, backend, cap, policy) compete in one
+        # halving loop — records which algorithm the tuner itself picks
+        auto = tune(g, base)
+        t_auto, _ = _plan_for(g, auto.to_config(base))
+        row(f"policies/{fam}/auto", t_auto,
+            f"policy={auto.policy};strategy={auto.strategy};"
+            f"delta={auto.delta};"
+            f"speedup_vs_delta_tuned={t_delta / t_auto:.2f}",
+            gate=False)
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,7 @@ def main(argv=None) -> int:
         bench_gamemap,
         bench_multisource,
         bench_p2p,
+        bench_policies,
         bench_preprocess,
         bench_queries,
         bench_rmat,
@@ -50,7 +51,8 @@ def main(argv=None) -> int:
     for mod in (bench_smallworld, bench_delta_sweep, bench_scaling,
                 bench_preprocess, bench_rmat, bench_gamemap,
                 bench_multisource, bench_sharded, bench_scaling_shards,
-                bench_queries, bench_p2p, bench_dynamic, bench_serving):
+                bench_queries, bench_p2p, bench_dynamic, bench_serving,
+                bench_policies):
         modules[mod.__name__.rsplit(".", 1)[-1].removeprefix("bench_")] = mod
     if args.only is not None:
         names = [s.strip() for s in args.only.split(",") if s.strip()]

@@ -79,8 +79,15 @@ from repro.core.delta_stepping import (
     _run_one_bounded,
     _run_one_p2p,
     _run_one_warm,
+    _run_policy_bounded,
+    _run_policy_many_seq,
+    _run_policy_many_vmapped,
+    _run_policy_one,
+    _run_policy_p2p,
+    _run_policy_warm,
     pred_argmin,
 )
+from repro.core.policies import RadiiStore, make_policy
 from repro.dynamic import Resident, apply_weight_update, plan_repair
 from repro.graphs.structures import COOGraph, INF32
 
@@ -211,9 +218,20 @@ class Plan:
         free_mask=None,
         record=None,
         fallback: bool = False,
+        radii_store: Optional[str] = None,
     ):
         if config.pred_mode == "packed":
             _require_x64()
+        if config.policy != "delta" and (
+            free_mask is not None and config.strategy == "pallas"
+        ):
+            # the grid stencil recomputes bucket membership in-kernel
+            # from tent // Δ — it has no frontier-mask input a policy
+            # loop could drive
+            raise ValueError(
+                "the grid-stencil game-map path is delta-only; "
+                f"policy={config.policy!r} needs a mask-driven backend"
+            )
         self.graph = graph
         self.config = config
         self.record = record
@@ -221,13 +239,17 @@ class Plan:
         self.backend = make_backend(graph, config, free_mask=free_mask)
         packed = config.pred_mode == "packed"
         self._packed = packed
-        n = graph.n_nodes
-        self._run1 = partial(_run_one, n=n, packed=packed)
-        many = _run_many_vmapped if self.backend.supports_vmap else _run_many_seq
-        self._run_many = partial(many, n=n, packed=packed)
-        self._run_p2p = partial(_run_one_p2p, n=n, packed=packed)
-        self._run_bounded = partial(_run_one_bounded, n=n, packed=packed)
-        self._run_warm = partial(_run_one_warm, n=n, packed=packed)
+        # frontier policy (DESIGN.md §15): 'delta' binds the classic
+        # bucket-loop drivers (bit-for-bit the pre-policy plan); rho /
+        # radius bind the generic policy loop over the same backend.
+        # radius preprocessing persists beside the tuner cache when the
+        # engine hands a store directory down.
+        self._radii_store = radii_store
+        self._policy = make_policy(
+            graph, config,
+            store=None if radii_store is None else RadiiStore(radii_store),
+        )
+        self._bind_drivers()
         # the one overflow-fallback point: only meaningful when a capped
         # compaction can actually overflow
         self._fallback = bool(fallback) and config.frontier_cap is not None
@@ -245,6 +267,34 @@ class Plan:
         # prepare_landmarks, or lazily with defaults on the first
         # landmark-mode PointToPoint
         self._landmarks = None
+
+    def _bind_drivers(self) -> None:
+        """Partially apply the module-level jitted drivers for the
+        plan's policy. Every query kind dispatches through these five
+        attributes, so the policy axis is invisible past this point."""
+        n = self.graph.n_nodes
+        packed = self._packed
+        if self.config.policy == "delta":
+            self._run1 = partial(_run_one, n=n, packed=packed)
+            many = (_run_many_vmapped if self.backend.supports_vmap
+                    else _run_many_seq)
+            self._run_many = partial(many, n=n, packed=packed)
+            self._run_p2p = partial(_run_one_p2p, n=n, packed=packed)
+            self._run_bounded = partial(_run_one_bounded, n=n, packed=packed)
+            self._run_warm = partial(_run_one_warm, n=n, packed=packed)
+        else:
+            pol = self._policy
+            self._run1 = partial(_run_policy_one, policy=pol, n=n,
+                                 packed=packed)
+            many = (_run_policy_many_vmapped if self.backend.supports_vmap
+                    else _run_policy_many_seq)
+            self._run_many = partial(many, policy=pol, n=n, packed=packed)
+            self._run_p2p = partial(_run_policy_p2p, policy=pol, n=n,
+                                    packed=packed)
+            self._run_bounded = partial(_run_policy_bounded, policy=pol,
+                                        n=n, packed=packed)
+            self._run_warm = partial(_run_policy_warm, policy=pol, n=n,
+                                     packed=packed)
 
     # -- the one public operation -------------------------------------------
 
@@ -272,6 +322,7 @@ class Plan:
                 dataclasses.replace(self.config, frontier_cap=None),
                 free_mask=self.free_mask,
                 record=self.record,
+                radii_store=self._radii_store,
             )
             # residency survives demotion: the resident answer was
             # solved on the same graph/pred_mode (only the cap differs),
@@ -317,6 +368,17 @@ class Plan:
         self.graph = apply_weight_update(self.graph, edge_ids, new_weights)
         self.backend = self._rebuild_backend()
         self._graph_version += 1
+        if self.config.policy == "radius":
+            # step radii derive from the weights: recompute (or re-fetch)
+            # and rebind the drivers. The radius policy keeps r as a
+            # pytree *leaf*, so the rebinding swaps arrays without
+            # retracing the compiled loop.
+            self._policy = make_policy(
+                self.graph, self.config,
+                store=(None if self._radii_store is None
+                       else RadiiStore(self._radii_store)),
+            )
+            self._bind_drivers()
         if lm is not None:
             lm.note_update(self.graph)
         if self._demoted is not None:
@@ -547,6 +609,7 @@ class Plan:
         return {
             "delta": cfg.delta,
             "strategy": cfg.strategy,
+            "policy": cfg.policy,
             "pred_mode": cfg.pred_mode,
             "frontier_cap": cfg.frontier_cap,
             "n_shards": cfg.n_shards,
@@ -623,6 +686,13 @@ class Plan:
         unidirectional answer (tests/test_landmarks.py pins this), and
         the path goes through the same cycle-guarded extractors as every
         other query."""
+        if self.config.policy != "delta":
+            raise ValueError(
+                "landmark p2p modes (alt/bidirectional) run the bucket "
+                "loop's all-light drivers and are delta-only; "
+                f"policy={self.config.policy!r} plans answer "
+                "PointToPoint via mode='early_exit'"
+            )
         lm = self._landmark_state()
         want_pred = self.config.pred_mode != "none"
         r = lm.solve_p2p(self.graph, q.source, q.target, mode,
@@ -775,7 +845,16 @@ class Engine:
             free_mask=self.free_mask,
             record=record,
             fallback=fallback,
+            radii_store=self._radii_store_path(),
         )
+
+    def _radii_store_path(self) -> Optional[str]:
+        """Radius-stepping preprocessing lives beside the tuner cache
+        (``<cache>.radii/``) whenever the engine has a persistent cache;
+        engines without one keep radii in memory."""
+        if self._tuning is not None and self._tuning.cache:
+            return f"{self._tuning.cache}.radii"
+        return None
 
     def _resolve(self, sources):
         if self._tuning is None:

@@ -53,6 +53,7 @@ from repro.core.backends import (
     dist_of as _dist_of,
     init_tent as _init_tent,
 )
+from repro.core.policies import POLICIES
 from repro.graphs.structures import COOGraph, INF32
 
 _IMAX = jnp.int32(2**31 - 1)
@@ -100,6 +101,20 @@ class DeltaConfig:
                    'bidirectional' (forward+backward meeting rule) or
                    'alt_bidirectional' (both; repro.landmarks,
                    DESIGN.md §14). Queries can override per-call.
+    policy       — frontier-selection policy (DESIGN.md §15): 'delta'
+                   (the paper's bucket loop), 'rho' (ρ-stepping: pop
+                   the ρ nearest pending vertices per round) or
+                   'radius' (radius-stepping: per-vertex precomputed
+                   step radii). Every policy runs over the same
+                   relaxation backends and is bitwise-pinned to the
+                   Dijkstra oracle; 'delta' keeps the classic loop
+                   bit-for-bit unchanged. The grid-stencil game-map
+                   path ('pallas' + free_mask) and the landmark p2p
+                   modes are delta-only.
+    rho          — 'rho' only: batch size ρ (None = heuristic
+                   ``policies.default_rho``).
+    radius_k     — 'radius' only: r(v) is the k-th smallest outgoing
+                   edge weight (see policies.compute_radii).
     """
 
     delta: int = 10
@@ -110,6 +125,9 @@ class DeltaConfig:
     grid_costs: Tuple[int, int] = (10, 14)
     n_shards: Optional[int] = None
     p2p_mode: str = "early_exit"
+    policy: str = "delta"
+    rho: Optional[int] = None
+    radius_k: int = 4
 
     def __post_init__(self):
         if self.p2p_mode not in P2P_MODES:
@@ -124,6 +142,12 @@ class DeltaConfig:
             raise ValueError("delta must be >= 1")
         if self.n_shards is not None and self.n_shards < 1:
             raise ValueError("n_shards must be >= 1")
+        if self.policy not in POLICIES:
+            raise ValueError(f"unknown policy {self.policy!r}")
+        if self.rho is not None and self.rho < 1:
+            raise ValueError("rho must be >= 1")
+        if self.radius_k < 1:
+            raise ValueError("radius_k must be >= 1")
 
 
 class SSSPResult(NamedTuple):
@@ -429,6 +453,169 @@ def _run_backend(backend: RelaxBackend, source, *, n: int, packed: bool,
         (tent0, explored0, i0, jnp.zeros((), jnp.int32),
          jnp.zeros((), jnp.int32), jnp.zeros((), bool)))
     return tent, outer, inner, over
+
+
+# ---------------------------------------------------------------------------
+# the generic frontier-policy loop (DESIGN.md §15) — rho / radius stepping
+# over the very same relaxation backends
+# ---------------------------------------------------------------------------
+
+def _run_policy(backend: RelaxBackend, policy, source, *, n: int,
+                packed: bool, stop=None, init=None):
+    """Round loop generic over a :mod:`repro.core.policies` policy.
+    Each round: compute the policy threshold θ from the pending state,
+    step the value-closed frontier ``pending & (tent <= θ)`` — mark it
+    explored, then sweep its **full** edge set through the unchanged
+    backend (light phase then heavy phase; the phase split is Δ-bucket
+    machinery the policies reuse purely as an edge partition). Closure
+    policies (radius) re-step under the same θ until nothing pending
+    remains at or below it.
+
+    Correctness is policy-independent: any round that relaxes all edges
+    of a non-empty pending subset permanently settles at least the
+    pending-minimum vertex (θ >= the pending minimum for every policy,
+    and that vertex's tent is final by the Dijkstra argument), so the
+    loop reaches the unique distance fixpoint in <= |V| rounds. Because
+    no heavy work is ever deferred across rounds, every future tent
+    assignment derives from a currently-pending vertex — which makes
+    ``_pending_min`` a sound stop bound here for *every* policy (the
+    p2p / bounded drivers below), where the bucket loop needs its
+    all-light gate.
+
+    Telemetry: ``outer`` counts policy rounds (the analogue of buckets
+    processed), ``inner`` counts relaxation iterations (sweep pairs) —
+    same counters, same meanings, comparable across policies.
+
+    ``stop`` is an optional ``(tent, explored) -> bool`` early-exit
+    predicate checked between rounds; ``init`` is the warm
+    ``(tent0, explored0)`` state (repro.dynamic). The pending rule —
+    not anything bucket- or policy-shaped — drives selection, which is
+    exactly why the repair path is policy-agnostic (DESIGN.md §15)."""
+    if init is None:
+        tent0 = _init_tent(n, source, packed)
+        explored0 = jnp.full((n,), INF32, jnp.int32)
+    else:
+        tent0, explored0 = init
+
+    zero_i = jnp.zeros((), jnp.int32)  # dummy bucket id: only the grid
+    # stencil backend reads it, and grid plans are delta-only (rejected
+    # at Plan construction)
+
+    def step(tent, explored, theta, inner, over):
+        d = _dist_of(tent, packed)
+        f = (d < explored) & (d <= theta)
+        explored = jnp.where(f, d, explored)
+        tent, o1 = backend.sweep(tent, f, zero_i, light=True, packed=packed)
+        tent, o2 = backend.sweep(tent, f, zero_i, light=False, packed=packed)
+        return tent, explored, inner + 1, over | o1 | o2
+
+    if policy.closure:
+        def round_body(c):
+            tent, explored, outer, inner, over = c
+            theta = policy.threshold(_dist_of(tent, packed), explored)
+
+            def icond(ic):
+                d = _dist_of(ic[0], packed)
+                return ((d < ic[1]) & (d <= theta)).any()
+
+            def ibody(ic):
+                return step(ic[0], ic[1], theta, ic[2], ic[3])
+
+            tent, explored, inner, over = lax.while_loop(
+                icond, ibody, (tent, explored, inner, over))
+            return (tent, explored, outer + 1, inner, over)
+    else:
+        def round_body(c):
+            tent, explored, outer, inner, over = c
+            theta = policy.threshold(_dist_of(tent, packed), explored)
+            tent, explored, inner, over = step(
+                tent, explored, theta, inner, over)
+            return (tent, explored, outer + 1, inner, over)
+
+    def round_cond(c):
+        d = _dist_of(c[0], packed)
+        go = (d < c[1]).any()
+        if stop is not None:
+            go = go & jnp.logical_not(stop(c[0], c[1]))
+        return go
+
+    tent, _, outer, inner, over = lax.while_loop(
+        round_cond, round_body,
+        (tent0, explored0, jnp.zeros((), jnp.int32),
+         jnp.zeros((), jnp.int32), jnp.zeros((), bool)))
+    return tent, outer, inner, over
+
+
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_policy_one(backend: RelaxBackend, source, *, policy, n: int,
+                    packed: bool):
+    """Jitted single-source policy driver (the non-delta twin of
+    ``_run_one``; the policy is a pytree argument, so its static shape
+    — ρ, the policy class — keys the compile cache while radius leaves
+    swap freely)."""
+    return _run_policy(backend, policy, source, n=n, packed=packed)
+
+
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_policy_many_vmapped(backend: RelaxBackend, sources, *, policy,
+                             n: int, packed: bool):
+    """Jitted batched policy driver (vmapped lanes, bitwise equal to
+    per-source single solves — same argument as ``_run_many_vmapped``)."""
+    return jax.vmap(lambda s: _run_policy(
+        backend, policy, s, n=n, packed=packed))(sources)
+
+
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_policy_many_seq(backend: RelaxBackend, sources, *, policy,
+                         n: int, packed: bool):
+    """Batched policy driver for backends without a batching rule."""
+    return lax.map(lambda s: _run_policy(
+        backend, policy, s, n=n, packed=packed), sources)
+
+
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_policy_p2p(backend: RelaxBackend, source, target, *, policy,
+                    n: int, packed: bool):
+    """Point-to-point early exit under a policy loop: stop once
+    ``tent[target] <= min pending tent`` — sound for every policy
+    because each policy round sweeps the full edge set of what it
+    relaxes (see ``_run_policy``), so all future values are >= the
+    pending minimum. This is the policy-loop analogue of the bucket
+    driver's ``all_light`` mid-bucket exit."""
+    def stop(tent, explored):
+        d = _dist_of(tent, packed)
+        return (d[target] < INF32) & (d[target] <= _pending_min(d, explored))
+
+    return _run_policy(backend, policy, source, n=n, packed=packed,
+                       stop=stop)
+
+
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_policy_bounded(backend: RelaxBackend, source, radius, *, policy,
+                        n: int, packed: bool):
+    """Bounded-radius policy driver: stop once the pending minimum
+    exceeds ``radius`` — from then on every future assignment is
+    > radius, so all tent values <= radius are final and anything
+    beyond is an upper bound the caller filters (same contract as the
+    bucket driver's past-the-bucket stop)."""
+    def stop(tent, explored):
+        return _pending_min(_dist_of(tent, packed), explored) > radius
+
+    return _run_policy(backend, policy, source, n=n, packed=packed,
+                       stop=stop)
+
+
+@partial(jax.jit, static_argnames=("n", "packed"))
+def _run_policy_warm(backend: RelaxBackend, tent0, explored0, *, policy,
+                     n: int, packed: bool):
+    """Warm-start policy driver (repro.dynamic, DESIGN.md §11/§15): the
+    policy round loop entered with the repaired state. The repair
+    machinery is untouched — it only manufactures ``tent < explored``
+    on the repair cone, and the pending rule is what every policy
+    selects from, so warm == cold holds per policy by the same unique
+    -fixpoint argument as for Δ-stepping."""
+    return _run_policy(backend, policy, None, n=n, packed=packed,
+                       init=(tent0, explored0))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,251 @@
+"""Frontier-selection policies — "which pending vertices step this
+round" as a pluggable axis (DESIGN.md §15).
+
+Δ-stepping's bucket loop is one answer to a more general question: each
+round, pick a non-empty subset of the *pending* vertices (``tent <
+explored``), mark it explored, and relax **all** of its edges. Any such
+policy converges to the exact SSSP fixpoint — the pending rule alone
+carries correctness (weights >= 0, each round permanently settles at
+least the pending-minimum vertex, so the loop terminates in <= |V|
+rounds at the unique distance fixpoint). The policy only shapes the
+*round structure*: how much parallel work each step exposes versus how
+much of it is wasted on non-final relaxations.
+
+Three members of the family (the Dong et al. 2021 stepping-framework
+view, arXiv:2105.06145):
+
+* ``delta``  — the paper's bucket loop, unchanged: handled by the
+  classic ``_run_backend`` driver (light/heavy split, fused kernels,
+  bucket telemetry all bit-for-bit identical to before this module
+  existed). :class:`DeltaPolicy` is a routing marker, never stepped.
+* ``rho``    — ρ-stepping (Dong/Gu/Sun/Zhang): step = pop the ρ nearest
+  pending vertices. The round threshold is the ρ-th smallest pending
+  tent; the batch is *value-closed* (every pending vertex at or below
+  the threshold steps, so ties never split and results stay independent
+  of vertex order). ρ=1 degenerates to Dijkstra-by-distance-class, ρ=n
+  to Bellman-Ford over the pending set.
+* ``radius`` — radius-stepping (Blelloch et al., arXiv:1602.03881):
+  each vertex carries a precomputed step radius r(v); a round picks
+  threshold θ = min over pending of (tent(v) + r(v)) and runs the inner
+  closure until no pending vertex remains at or below θ. Correctness
+  never depends on r — any r >= 0 yields exact distances (θ >= the
+  pending minimum, so the round-settles-the-min-class argument above
+  still holds); r only trades round count against wasted relaxations.
+
+The policies share every relaxation backend unchanged: a policy round
+sweeps its frontier through ``backend.sweep`` twice (light then heavy
+phase), which together cover the vertex's full edge set — the no
+-deferred-heavy discipline that makes the pending-minimum stop bounds
+of the point-to-point and bounded-radius drivers sound for every
+policy (see ``delta_stepping._run_policy``).
+
+``compute_radii`` is a deliberate deviation from Blelloch et al.: the
+paper computes r(v) from exact k-nearest-ball distances (a Dijkstra per
+vertex); here r(v) is the k-th smallest *outgoing edge weight* — an
+O(m log m) host-side surrogate honoring the same intent (vertices with
+many cheap edges step further) with the identical correctness story
+(any r >= 0 is exact). Radii are persisted beside the tuner cache via
+:class:`RadiiStore` (same npz idiom as ``landmarks.store``: content
+-hashed key, atomic replace, corrupt file == miss).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import os
+import tempfile
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.structures import COOGraph, INF32
+
+POLICIES = ("delta", "rho", "radius")
+
+
+# ---------------------------------------------------------------------------
+# the policy pytrees
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeltaPolicy:
+    """Marker for the classic Δ-stepping bucket loop. Plans with this
+    policy bind the original ``_run_backend`` drivers (bitwise unchanged
+    — including the fused light-phase protocol and bucket telemetry);
+    the generic policy loop never sees it."""
+
+    name = "delta"
+    closure = False
+
+    def threshold(self, d, explored):  # pragma: no cover - never stepped
+        raise NotImplementedError("DeltaPolicy routes to the bucket loop")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RhoPolicy:
+    """ρ-stepping: the round threshold is the ρ-th smallest pending
+    tent (INF when fewer than ρ vertices are pending — then the whole
+    pending set steps). ρ is static: it shapes the compiled program's
+    cache key, exactly like Δ does for the bucket loop."""
+
+    rho: int = dataclasses.field(metadata=dict(static=True))
+
+    name = "rho"
+    closure = False
+
+    def threshold(self, d, explored):
+        pend = jnp.where(d < explored, d, INF32)
+        k = min(int(self.rho), int(d.shape[0]))
+        return jnp.sort(pend)[k - 1]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class RadiusPolicy:
+    """Radius-stepping: θ = min over pending of (tent(v) + r(v)), inner
+    closure drains everything at or below θ. ``r`` is a *leaf* (not
+    static): weight updates on a dynamic plan swap in fresh radii
+    without retracing the driver."""
+
+    r: jax.Array  # int32[n] per-vertex step radii, >= 0
+
+    name = "radius"
+    closure = True
+
+    def threshold(self, d, explored):
+        pend = d < explored
+        # non-pending lanes may wrap (INF + r) — masked out before the min
+        reach = jnp.where(pend, d + self.r, INF32)
+        return reach.min()
+
+
+# ---------------------------------------------------------------------------
+# radius preprocessing + persistence
+# ---------------------------------------------------------------------------
+
+def compute_radii(graph: COOGraph, k: int) -> np.ndarray:
+    """Per-vertex step radii for radius-stepping: r(v) = k-th smallest
+    outgoing edge weight (largest outgoing weight when deg(v) < k; 0 for
+    isolated vertices). Host-side numpy, O(m log m). Any r >= 0 keeps
+    the policy exact (see module doc), so the surrogate is free to be
+    cheap."""
+    if k < 1:
+        raise ValueError("radius_k must be >= 1")
+    n = graph.n_nodes
+    src = np.asarray(graph.src)
+    w = np.asarray(graph.w)
+    r = np.zeros((n,), np.int32)
+    if src.size == 0:
+        return r
+    order = np.lexsort((w, src))
+    ws = w[order]
+    deg = np.bincount(src, minlength=n)
+    starts = np.zeros((n,), np.int64)
+    starts[1:] = np.cumsum(deg)[:-1]
+    has = deg > 0
+    idx = starts + np.minimum(k - 1, np.maximum(deg - 1, 0))
+    r[has] = ws[idx[has]]
+    return r.astype(np.int32)
+
+
+def graph_weight_hash(graph: COOGraph) -> str:
+    """Content hash of (src, dst, w, n) — the exact identity radii
+    depend on (unlike the tuner's structural fingerprint, which is
+    deliberately coarse)."""
+    h = hashlib.sha1()
+    for a in (graph.src, graph.dst, graph.w):
+        h.update(np.ascontiguousarray(np.asarray(a, np.int64)).tobytes())
+    h.update(str(int(graph.n_nodes)).encode())
+    return h.hexdigest()
+
+
+class RadiiStore:
+    """Persistent per-graph radii, stored beside the tuner cache (the
+    façade derives the directory from ``Tuning.cache``). One ``.npz``
+    per (graph content hash, k), atomically replaced; unreadable or
+    mismatched files are misses, never errors. ``path=None`` keeps an
+    in-memory store (tests, ephemeral graphs)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._mem: dict = {}
+        if path is not None:
+            os.makedirs(path, exist_ok=True)
+
+    def _key(self, whash: str, k: int) -> str:
+        return hashlib.sha1(f"{whash}|k={int(k)}".encode()).hexdigest()
+
+    def _file(self, key: str) -> str:
+        return os.path.join(self.path, f"radii_{key}.npz")
+
+    def get(self, graph: COOGraph, k: int) -> Optional[np.ndarray]:
+        whash = graph_weight_hash(graph)
+        key = self._key(whash, k)
+        if key in self._mem:
+            return self._mem[key]
+        if self.path is None:
+            return None
+        try:
+            with np.load(self._file(key), allow_pickle=False) as z:
+                if (str(z["whash"]) != whash or int(z["k"]) != int(k)
+                        or int(z["n"]) != int(graph.n_nodes)):
+                    return None
+                r = np.asarray(z["r"], np.int32)
+        except (OSError, KeyError, ValueError):
+            return None
+        if r.shape != (graph.n_nodes,):
+            return None
+        self._mem[key] = r
+        return r
+
+    def put(self, graph: COOGraph, k: int, r: np.ndarray) -> None:
+        whash = graph_weight_hash(graph)
+        key = self._key(whash, k)
+        r = np.asarray(r, np.int32)
+        self._mem[key] = r
+        if self.path is None:
+            return
+        fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                np.savez(f, r=r, whash=np.str_(whash),
+                         k=np.int64(k), n=np.int64(graph.n_nodes))
+            os.replace(tmp, self._file(key))
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# construction
+# ---------------------------------------------------------------------------
+
+def default_rho(n: int) -> int:
+    """Batch-size heuristic when ``DeltaConfig.rho`` is unset: large
+    batches (Dong et al. run ρ in the 2^15..2^21 range on million-vertex
+    graphs); clipped so tiny graphs still form multi-vertex rounds."""
+    return max(32, n // 8)
+
+
+def make_policy(graph: COOGraph, cfg, store: Optional[RadiiStore] = None):
+    """Build the frontier policy named by ``cfg.policy`` for ``graph``.
+    ``store`` (optional) persists/reuses radius preprocessing."""
+    if cfg.policy == "delta":
+        return DeltaPolicy()
+    if cfg.policy == "rho":
+        rho = cfg.rho if cfg.rho is not None else default_rho(graph.n_nodes)
+        return RhoPolicy(rho=int(rho))
+    if cfg.policy == "radius":
+        r = store.get(graph, cfg.radius_k) if store is not None else None
+        if r is None:
+            r = compute_radii(graph, cfg.radius_k)
+            if store is not None:
+                store.put(graph, cfg.radius_k, r)
+        return RadiusPolicy(r=jnp.asarray(r, jnp.int32))
+    raise ValueError(f"unknown policy {cfg.policy!r}")

@@ -34,7 +34,10 @@ def _serve_sssp(args):
     # TuningRecord attaches to the tenant's plan.
     auto = args.tune or args.tune_cache is not None
     config = DeltaConfig(delta=args.delta, strategy=args.strategy,
-                         n_shards=args.shards)
+                         n_shards=args.shards, policy=args.policy,
+                         rho=args.rho)
+    if not auto and args.policy != "delta":
+        print(f"[serve] frontier policy: {args.policy}")
     if not auto and args.strategy.startswith("sharded"):
         from repro.core import resolve_n_shards
         print(f"[serve] mesh-sharded relaxation over "
@@ -47,7 +50,8 @@ def _serve_sssp(args):
         rec = srv.plan().record
         provenance = "none" if rec is None else rec.source
         print(f"[serve] tuned at graph load: Δ={cfg.delta} "
-              f"strategy={cfg.strategy} cap={cfg.frontier_cap} "
+              f"strategy={cfg.strategy} policy={cfg.policy} "
+              f"cap={cfg.frontier_cap} "
               f"record={provenance} "
               f"({time.perf_counter() - t0:.1f}s)")
     srv.submit(SingleSource(0))
@@ -127,6 +131,13 @@ def main():
     ap.add_argument("--shards", type=int, default=None,
                     help="SSSP mode, sharded_* strategies: mesh width "
                          "(default: every local device)")
+    ap.add_argument("--policy", default="delta",
+                    choices=["delta", "rho", "radius"],
+                    help="SSSP mode: frontier-selection policy "
+                         "(Δ-stepping / ρ-stepping / radius-stepping, "
+                         "DESIGN.md §15)")
+    ap.add_argument("--rho", type=int, default=None,
+                    help="SSSP mode, --policy rho: batch size ρ")
     ap.add_argument("--batch", type=int, default=8,
                     help="SSSP microbatch size (solve_many lanes)")
     ap.add_argument("--tune", action="store_true",

@@ -55,6 +55,17 @@ def main():
     ap.add_argument("--shards", type=int, default=None,
                     help="sharded_* strategies: 1-D mesh width "
                          "(default: every local device)")
+    ap.add_argument("--policy", default="delta",
+                    choices=["delta", "rho", "radius"],
+                    help="frontier-selection policy (DESIGN.md §15): "
+                         "the paper's bucket loop, ρ-stepping or "
+                         "radius-stepping over the same backend")
+    ap.add_argument("--rho", type=int, default=None,
+                    help="--policy rho: batch size ρ (default: "
+                         "heuristic max(32, |V|/8))")
+    ap.add_argument("--radius-k", type=int, default=4,
+                    help="--policy radius: r(v) = k-th smallest "
+                         "outgoing edge weight")
     ap.add_argument("--interpret", action="store_true",
                     help="run pallas kernels in interpret mode (CPU)")
     ap.add_argument("--sources", type=int, default=1)
@@ -136,7 +147,8 @@ def main():
         from repro.core import DeltaConfig
         cfg = DeltaConfig(delta=args.delta, strategy=args.strategy,
                           pred_mode="argmin", interpret=args.interpret,
-                          n_shards=args.shards)
+                          n_shards=args.shards, policy=args.policy,
+                          rho=args.rho, radius_k=args.radius_k)
         t0 = time.perf_counter()
         tuning = (Tuning(measure=args.tune, cache=args.tune_cache)
                   if (args.tune or args.tune_cache) else None)
@@ -147,8 +159,11 @@ def main():
         cfg = plan.config
         if args.tune or args.tune_cache:
             print(f"[sssp] tuned config: Δ={cfg.delta} "
-                  f"strategy={cfg.strategy} cap={cfg.frontier_cap} "
+                  f"strategy={cfg.strategy} policy={cfg.policy} "
+                  f"cap={cfg.frontier_cap} "
                   f"({time.perf_counter() - t0:.1f}s to tune)")
+        elif cfg.policy != "delta":
+            print(f"[sssp] frontier policy: {cfg.policy}")
         if cfg.strategy.startswith("sharded"):
             from repro.core import resolve_n_shards
             print(f"[sssp] mesh-sharded relaxation over "

@@ -33,6 +33,7 @@ from repro.tune.search import (
     TuningRecord,
     build_safe_solver,
     candidate_configs,
+    default_policies,
     default_strategies,
     heuristic_record,
     resolve_config,
@@ -47,6 +48,7 @@ __all__ = [
     "TuningRecord",
     "build_safe_solver",
     "candidate_configs",
+    "default_policies",
     "default_strategies",
     "estimate_delta",
     "fingerprint",

@@ -134,7 +134,13 @@ def fingerprint(stats: GraphStats) -> str:
     search space includes the mesh-sharded backends (DESIGN.md §9), and
     a winner measured on an 8-device mesh proves nothing about a
     1-device host — records must not cross-contaminate across hardware
-    widths."""
+    widths.
+
+    The leading version tag is bumped whenever the search space itself
+    changes shape (v5: the frontier-policy algorithm axis, DESIGN.md
+    §15) — records from an older space silently miss the cache and
+    trigger a fresh resolve instead of pinning a winner that never
+    competed against the new candidates."""
     if stats.ecc0 < 0:
         raise ValueError(
             "stats were computed with probe_ecc=False — no cache key "
@@ -145,7 +151,7 @@ def fingerprint(stats: GraphStats) -> str:
     hist = ",".join(str(c) for c in stats.degree_hist)
     ecc = 0 if stats.ecc0 == 0 else 1 + int(np.log2(stats.ecc0))
     return (
-        f"v4:n={stats.n_nodes}:m={stats.n_edges}"
+        f"v5:n={stats.n_nodes}:m={stats.n_edges}"
         f":deg={hist}:w={stats.w_min}-{stats.w_max}:ecc={ecc}"
         f":dev={jax.device_count()}"
     )

@@ -67,15 +67,19 @@ class TuningRecord:
     frontier_cap: Optional[int]
     source: str
     us_per_solve: Optional[float] = None
-    trials: Tuple[Tuple[int, str, int, float], ...] = ()
+    trials: Tuple[Tuple[int, str, int, str, float], ...] = ()
     n_shards: Optional[int] = None
     # query-time axis (repro.landmarks): the measured point-to-point
     # algorithm choice of tune_p2p; None = never measured (early_exit)
     p2p_mode: Optional[str] = None
+    # the algorithm axis (DESIGN.md §15): which frontier policy won.
+    # Records predating the axis deserialize as 'delta' (the only
+    # policy they could have measured).
+    policy: str = "delta"
 
     def to_config(self, base: Optional[DeltaConfig] = None) -> DeltaConfig:
         """Concrete engine config: tuned (Δ, strategy, cap, mesh shape,
-        p2p mode) over the caller's base for everything else
+        policy, p2p mode) over the caller's base for everything else
         (pred_mode, ...)."""
         base = base if base is not None else DeltaConfig()
         return dataclasses.replace(
@@ -85,6 +89,7 @@ class TuningRecord:
             frontier_cap=self.frontier_cap,
             n_shards=self.n_shards if self.n_shards is not None else base.n_shards,
             p2p_mode=self.p2p_mode if self.p2p_mode is not None else base.p2p_mode,
+            policy=self.policy,
         )
 
     def to_json(self) -> dict:
@@ -98,10 +103,20 @@ class TuningRecord:
             "trials": [list(t) for t in self.trials],
             "n_shards": self.n_shards,
             "p2p_mode": self.p2p_mode,
+            "policy": self.policy,
         }
 
     @classmethod
     def from_json(cls, d: dict) -> "TuningRecord":
+        def trial(row):
+            # pre-policy records carried (Δ, strategy, cap, µs) rows
+            if len(row) == 4:
+                a, b, c, t = row
+                p = "delta"
+            else:
+                a, b, c, p, t = row
+            return (int(a), str(b), int(c), str(p), float(t))
+
         return cls(
             fingerprint=d["fingerprint"],
             delta=int(d["delta"]),
@@ -111,12 +126,10 @@ class TuningRecord:
             ),
             source=d.get("source", "cache"),
             us_per_solve=d.get("us_per_solve"),
-            trials=tuple(
-                (int(a), str(b), int(c), float(t))
-                for a, b, c, t in d.get("trials", [])
-            ),
+            trials=tuple(trial(row) for row in d.get("trials", [])),
             n_shards=(None if d.get("n_shards") is None else int(d["n_shards"])),
             p2p_mode=d.get("p2p_mode"),
+            policy=str(d.get("policy", "delta")),
         )
 
 
@@ -136,6 +149,7 @@ def heuristic_record(
         strategy=base.strategy,
         frontier_cap=base.frontier_cap,
         source="heuristic",
+        policy=base.policy,
     )
 
 
@@ -158,33 +172,53 @@ def default_strategies() -> Tuple[str, ...]:
     return ("edge", "ell", "fused")
 
 
+def default_policies() -> Tuple[str, ...]:
+    """The tuner's algorithm axis (DESIGN.md §15): every frontier policy
+    competes by default — each one is exact, so the axis only ever moves
+    time."""
+    return ("delta", "rho", "radius")
+
+
 def candidate_configs(
     stats: GraphStats,
     strategies: Optional[Sequence[str]] = None,
     deltas: Optional[Sequence[int]] = None,
     cap_fractions: Sequence[float] = _CAP_FRACTIONS,
+    policies: Optional[Sequence[str]] = None,
 ) -> list:
-    """The (Δ, strategy, frontier_cap) grid the tuner searches. Edge
-    strategy ignores packing (no compaction), so it contributes one
+    """The (Δ, strategy, frontier_cap, policy) grid the tuner searches.
+    Edge strategy ignores packing (no compaction), so it contributes one
     candidate per Δ; ELL-family strategies get one per cap fraction.
     The sharded strategies contribute one candidate per Δ at full mesh
     width (``sharded_ell``'s per-shard buffer is already |V|/P wide —
-    fractional caps would mostly re-measure overflow rejections)."""
+    fractional caps would mostly re-measure overflow rejections).
+
+    The non-delta policies do not bucket, so Δ only moves their
+    light/heavy edge-phase split — they enter at the single central Δ of
+    the grid rather than multiplying the whole Δ axis."""
     if strategies is None:
         strategies = default_strategies()
     if deltas is None:
         est = estimate_delta(stats)
         deltas = sorted({max(1, int(round(est * f))) for f in _DELTA_FACTORS})
+    if policies is None:
+        policies = default_policies()
     n = stats.n_nodes
     out = []
-    for delta in deltas:
-        for strat in strategies:
-            if strat in ("ell", "pallas", "fused"):
-                for frac in cap_fractions:
-                    cap = None if frac >= 1.0 else max(_MIN_CAP, int(n * frac))
-                    out.append((delta, strat, cap))
-            else:
-                out.append((delta, strat, None))
+    for policy in policies:
+        pol_deltas = (
+            deltas if policy == "delta"
+            else [sorted(deltas)[len(deltas) // 2]]
+        )
+        for delta in pol_deltas:
+            for strat in strategies:
+                if strat in ("ell", "pallas", "fused"):
+                    for frac in cap_fractions:
+                        cap = (None if frac >= 1.0
+                               else max(_MIN_CAP, int(n * frac)))
+                        out.append((delta, strat, cap, policy))
+                else:
+                    out.append((delta, strat, None, policy))
     return out
 
 
@@ -272,6 +306,7 @@ def tune(
     strategies: Optional[Sequence[str]] = None,
     deltas: Optional[Sequence[int]] = None,
     cap_fractions: Sequence[float] = _CAP_FRACTIONS,
+    policies: Optional[Sequence[str]] = None,
     cache=None,
     free_mask=None,
     measure_fn=None,
@@ -283,9 +318,12 @@ def tune(
     off the timed path — and restored by ``TuningRecord.to_config``).
     ``strategies=None`` searches ``default_strategies()``: the mesh-
     sharded backends join the space whenever >1 device is present.
+    ``policies=None`` searches ``default_policies()`` — the algorithm
+    axis rides the same halving loop as (Δ, strategy, cap).
     ``cache`` (a ``TuningCache``-shaped object) is consulted before the
     search and updated — and saved — after it. ``measure_fn`` overrides
-    the timing primitive (tests inject deterministic costs).
+    the timing primitive (tests inject deterministic costs); its
+    signature is ``(delta, strategy, cap, policy, reps) -> seconds``.
     """
     base = base if base is not None else DeltaConfig()
     stats = graph_stats(graph)
@@ -302,11 +340,12 @@ def tune(
         # the warm solver instead of re-paying the build
         solvers = {}
 
-        def measure_fn(delta, strat, cap, reps):
-            key = (delta, strat, cap)
+        def measure_fn(delta, strat, cap, policy, reps):
+            key = (delta, strat, cap, policy)
             if key not in solvers:
                 cfg = dataclasses.replace(
-                    bench_cfg, delta=delta, strategy=strat, frontier_cap=cap
+                    bench_cfg, delta=delta, strategy=strat,
+                    frontier_cap=cap, policy=policy,
                 )
                 solvers[key] = _candidate_solver(
                     graph, cfg, sources, free_mask=free_mask
@@ -316,13 +355,15 @@ def tune(
             return _time_solver(solvers[key], sources, reps)
 
     survivors = candidate_configs(
-        stats, strategies=strategies, deltas=deltas, cap_fractions=cap_fractions
+        stats, strategies=strategies, deltas=deltas,
+        cap_fractions=cap_fractions, policies=policies,
     )
     reps = 1
     evidence = {}  # candidate -> its latest (best-sampled) measurement
     timed = []
     while True:
-        timed = [(measure_fn(d, s, c, reps), (d, s, c)) for d, s, c in survivors]
+        timed = [(measure_fn(d, s, c, p, reps), (d, s, c, p))
+                 for d, s, c, p in survivors]
         timed.sort(key=lambda x: x[0])
         timed = [t for t in timed if np.isfinite(t[0])]
         evidence.update({cand: t for t, cand in timed})
@@ -335,13 +376,13 @@ def tune(
         if len(survivors) == 1:
             # one final, better-sampled measurement of the winner
             reps *= 2
-            d, s, c = survivors[0]
-            timed = [(measure_fn(d, s, c, reps), (d, s, c))]
-            evidence[(d, s, c)] = timed[0][0]
+            d, s, c, p = survivors[0]
+            timed = [(measure_fn(d, s, c, p, reps), (d, s, c, p))]
+            evidence[(d, s, c, p)] = timed[0][0]
             break
         reps *= 2
 
-    best_t, (delta, strat, cap) = timed[0]
+    best_t, (delta, strat, cap, policy) = timed[0]
     if strat.startswith("sharded"):
         # pin the mesh width the winner was actually measured on
         from repro.core.backends import resolve_n_shards
@@ -357,10 +398,11 @@ def tune(
         source="measured",
         us_per_solve=round(best_t * 1e6, 1),
         trials=tuple(
-            (d, s, -1 if c is None else c, round(t * 1e6, 1))
-            for (d, s, c), t in sorted(evidence.items(), key=lambda kv: kv[1])
+            (d, s, -1 if c is None else c, p, round(t * 1e6, 1))
+            for (d, s, c, p), t in sorted(evidence.items(), key=lambda kv: kv[1])
         ),
         n_shards=shards,
+        policy=policy,
     )
     if cache is not None:
         cache.put(record)

@@ -17,6 +17,12 @@ import numpy as np
 ALL_STRATEGIES = ("edge", "ell", "pallas", "fused",
                   "sharded_edge", "sharded_ell", "sharded_fused")
 
+# Every frontier-selection policy (DESIGN.md §15), same contract: the
+# differential suites consume this tuple, so a newly added policy joins
+# the oracle cross product automatically. Pinned equal to
+# repro.core.policies.POLICIES by tests/test_policies.py.
+ALL_POLICIES = ("delta", "rho", "radius")
+
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True

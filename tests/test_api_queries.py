@@ -23,7 +23,8 @@ from functools import partial
 import jax.numpy as jnp
 import numpy as np
 
-from _property_driver import ALL_STRATEGIES, drive, null_ctx as _null
+from _property_driver import (
+    ALL_POLICIES, ALL_STRATEGIES, drive, null_ctx as _null)
 from test_differential import adversarial_coo
 from repro.api import (
     BoundedRadius,
@@ -217,6 +218,47 @@ def test_point_to_point_early_exit_line_graph():
     # early exit must never be wrong for the farthest vertex either
     far = plan.solve(PointToPoint(0, 127))
     assert far.distance == 1270
+
+
+@drive_seed(max_examples=8, fallback_examples=4)
+def test_point_to_point_policy_family_matches_oracle(seed):
+    """p2p early exit under the non-delta frontier policies (DESIGN.md
+    §15): the stop rule ``tent[target] <= min pending tent`` is sound
+    for every policy (each round sweeps the full edge set of what it
+    relaxes), so the answered distance must equal heap Dijkstra on the
+    adversarial corpus — reachable targets and the disconnected tail."""
+    g, source, _ = adversarial_coo(seed)
+    dref, _ = dijkstra(g, source)
+    rng = np.random.default_rng(seed)
+    targets = (int(rng.integers(0, g.n_nodes)), g.n_nodes - 1)
+    for policy in ALL_POLICIES[1:]:
+        for strategy in ("edge", "ell", "sharded_fused"):
+            cfg = DeltaConfig(delta=7, strategy=strategy,
+                              pred_mode="argmin", interpret=True,
+                              policy=policy, rho=4)
+            plan = Engine(g, cfg).plan()
+            for target in targets:
+                res = plan.solve(PointToPoint(source, target))
+                tag = (seed, policy, strategy, target)
+                assert res.distance == int(dref[target]), tag
+
+
+def test_point_to_point_policy_early_exit_line_graph():
+    """The early exit has measurable content under every policy: a near
+    target settles in strictly fewer rounds than the full solve."""
+    g = _line_graph(128, w=10)
+    for policy, extra in (("rho", dict(rho=4)), ("radius", {})):
+        cfg = DeltaConfig(delta=10, strategy="edge", pred_mode="argmin",
+                          policy=policy, **extra)
+        plan = Engine(g, cfg).plan()
+        full = plan.solve(SingleSource(0))
+        near = plan.solve(PointToPoint(0, 5))
+        assert near.distance == 50, policy
+        assert near.path == [0, 1, 2, 3, 4, 5], policy
+        assert (int(near.telemetry.buckets)
+                < int(full.telemetry.buckets)), policy
+        far = plan.solve(PointToPoint(0, 127))
+        assert far.distance == 1270, policy
 
 
 def test_point_to_point_source_is_target():

@@ -3,7 +3,9 @@ Dijkstra oracle on adversarial random COO graphs — zero-weight edges,
 self-loops, duplicate (parallel) edges and disconnected vertices — across
 **every** backend × pred_mode × Δ combination, the mesh-sharded backends
 included (n_shards = every local device: 1 in a plain run, 8 under the
-CI ``sharded`` job's forced host platform).
+CI ``sharded`` job's forced host platform) — and, at a fixed Δ, the same
+cross product for every non-delta frontier policy (ρ-stepping /
+radius-stepping, DESIGN.md §15).
 
 Hypothesis drives the case generation when it is installed, with a
 deterministic seed-sweep fallback otherwise (shared driver:
@@ -19,9 +21,12 @@ predecessor cycle; test_determinism.py documents argmin's divergences).
 """
 from functools import partial
 
+import jax
 import numpy as np
+import pytest
 
-from _property_driver import ALL_STRATEGIES, drive, null_ctx as _null
+from _property_driver import (
+    ALL_POLICIES, ALL_STRATEGIES, drive, null_ctx as _null)
 from repro.compat import enable_x64
 from repro.core import (
     DeltaConfig,
@@ -36,6 +41,18 @@ drive_seed = partial(
     drive,
     strategy=lambda st: st.integers(min_value=0, max_value=2**31 - 1),
     fallback_draw=lambda rng: int(rng.integers(0, 2**31)))
+
+
+# This module compiles the single largest program population in the
+# suite (backend × pred × Δ × policy); on top of the hundreds of
+# executables cached by the modules that run before it, XLA's CPU
+# compiler can segfault mid-compile (single-core boxes, deterministic).
+# An empty cache is the state this module is validated under standalone,
+# and costs nothing here: every program below is keyed on this module's
+# own fixed shape and compiles fresh either way.
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_compile_caches():
+    jax.clear_caches()
 
 
 # One fixed shape for every case: the shape is the jit cache key, the
@@ -67,11 +84,14 @@ def adversarial_coo(seed: int):
     return g, source, w_lo
 
 
-def _solve(g, source, strategy, pred_mode, delta):
+def _solve(g, source, strategy, pred_mode, delta, policy="delta"):
+    # rho pinned small so the ρ-batches actually split the frontier on
+    # N=32 graphs (the interesting regime; rho >= N degenerates to one
+    # Dijkstra-like giant step only when every vertex is pending)
     cfg = DeltaConfig(delta=delta, strategy=strategy, pred_mode=pred_mode,
-                      interpret=True)
+                      interpret=True, policy=policy, rho=4)
     res = DeltaSteppingSolver(g, cfg).solve(source)
-    assert not bool(res.overflow), (strategy, pred_mode, delta)
+    assert not bool(res.overflow), (strategy, pred_mode, delta, policy)
     return res
 
 
@@ -118,6 +138,51 @@ def test_backends_agree_bitwise_on_adversarial_graphs(seed):
         np.testing.assert_array_equal(
             np.asarray(res.pred), np.asarray(base.pred), err_msg=strategy)
         assert int(res.outer_iters) == int(base.outer_iters), strategy
+
+
+@drive_seed(max_examples=10, fallback_examples=5)
+def test_policy_family_full_cross_product_matches_oracle(seed):
+    """The frontier-policy family (ρ-stepping, radius-stepping,
+    DESIGN.md §15) pinned to the heap-Dijkstra oracle across the full
+    backend × pred_mode cross product on the same adversarial corpus —
+    dist AND pred (packed (cost, pred) words included) must be exact.
+    Δ is fixed: the non-delta policies do not bucket, Δ only moves
+    their light/heavy phase split."""
+    g, source, w_lo = adversarial_coo(seed)
+    dref, _ = dijkstra(g, source)
+    unreachable = dref >= int(INF32)
+    for policy in ALL_POLICIES[1:]:             # delta covered above
+        for strategy in BACKENDS:
+            for pred_mode in PRED_MODES:
+                ctx = enable_x64() if pred_mode == "packed" else _null()
+                with ctx:
+                    res = _solve(g, source, strategy, pred_mode, 7,
+                                 policy=policy)
+                    dist = np.asarray(res.dist, np.int64)
+                    pred = np.asarray(res.pred)
+                tag = (seed, policy, strategy, pred_mode)
+                np.testing.assert_array_equal(dist, dref, err_msg=str(tag))
+                if pred_mode == "none":
+                    continue
+                assert (pred[unreachable] == -1).all(), tag
+                assert pred[source] == -1, tag
+                if pred_mode == "packed" or w_lo >= 1:
+                    assert walk_pred_tree(g, source, dist, pred), tag
+
+
+@drive_seed(max_examples=15, fallback_examples=6)
+def test_rho_sweep_matches_oracle(seed):
+    """ρ-stepping is exact for *every* batch size: ρ=1 (Dijkstra-like,
+    one distance class per round), small batches, and ρ >= |V| (one
+    giant pending sweep per round)."""
+    g, source, _ = adversarial_coo(seed)
+    dref, _ = dijkstra(g, source)
+    for rho in (1, 3, N, 4 * N):
+        cfg = DeltaConfig(delta=7, strategy="edge", pred_mode="none",
+                          policy="rho", rho=rho)
+        res = DeltaSteppingSolver(g, cfg).solve(source)
+        np.testing.assert_array_equal(
+            np.asarray(res.dist, np.int64), dref, err_msg=f"rho={rho}")
 
 
 @drive_seed(max_examples=20, fallback_examples=8)

@@ -17,7 +17,7 @@ microbatches, and the tuning-record reuse across in-range cost churn.
 import numpy as np
 import pytest
 
-from _property_driver import ALL_STRATEGIES, null_ctx
+from _property_driver import ALL_POLICIES, ALL_STRATEGIES, null_ctx
 from repro.api import Engine, MultiSource, SingleSource, UpdateBatch
 from repro.compat import enable_x64
 from repro.core import DeltaConfig, dijkstra, walk_pred_tree
@@ -77,6 +77,48 @@ def test_warm_resolve_bitwise_equals_cold(strategy, pred_mode):
                 assert walk_pred_tree(cur, 0, dref, np.asarray(warm.pred))
             # mixed batches contain increases: 'none' mode must have
             # fallen back cold, the tree-tracking modes repair warm
+            assert bool(warm.telemetry.warm) == (pred_mode != "none")
+
+
+@pytest.mark.parametrize("pred_mode", ["none", "argmin", "packed"])
+@pytest.mark.parametrize("policy", ALL_POLICIES[1:])
+@pytest.mark.parametrize("strategy", ["edge", "ell", "sharded_fused"])
+def test_warm_resolve_bitwise_equals_cold_per_policy(strategy, policy,
+                                                     pred_mode):
+    """The warm contract holds per frontier policy (DESIGN.md §15): the
+    repair path only manufactures pending state (``tent < explored``) on
+    the repair cone, and pending is what every policy selects from — so
+    warm == cold is policy-agnostic. Two stacked batches, each warm
+    re-solve bitwise equal to a cold solve of the updated graph.
+    radius-stepping additionally recomputes its weight-dependent r(v)
+    radii at update time; a stale table would still be *exact* (any
+    r >= 0 is), so the bitwise pin is against the cold plan's table."""
+    g = watts_strogatz(240, 6, 0.05, seed=3)
+    rng = np.random.default_rng(17)
+    packed = pred_mode == "packed"
+
+    def cfg():
+        return DeltaConfig(delta=10, strategy=strategy, pred_mode=pred_mode,
+                           interpret=True, policy=policy, rho=24)
+
+    with _x64_if(packed):
+        plan = Engine(g, cfg()).plan()
+        plan.solve(SingleSource(0))
+        cur = g
+        for _ in range(2):
+            ids, neww = _perturb(rng, np.asarray(plan.graph.w), k=12)
+            warm = plan.solve(UpdateBatch(ids, neww))
+            cur = apply_weight_update(cur, ids, neww)
+            cold = Engine(cur, cfg()).plan().solve(SingleSource(0))
+            np.testing.assert_array_equal(
+                np.asarray(warm.dist), np.asarray(cold.dist))
+            np.testing.assert_array_equal(
+                np.asarray(warm.pred), np.asarray(cold.pred))
+            dref, _ = dijkstra(cur, 0)
+            np.testing.assert_array_equal(
+                np.asarray(warm.dist, np.int64), dref)
+            if pred_mode != "none":
+                assert walk_pred_tree(cur, 0, dref, np.asarray(warm.pred))
             assert bool(warm.telemetry.warm) == (pred_mode != "none")
 
 

@@ -1,0 +1,293 @@
+"""Frontier-policy family tests (repro.core.policies, DESIGN.md §15).
+
+The policy axis — Δ-stepping / ρ-stepping / radius-stepping — shares
+every relaxation backend, the telemetry counters and the warm-repair
+path. This file pins the policy-specific contracts the differential
+cross product (tests/test_differential.py) does not state explicitly:
+
+* the driver tuple ``ALL_POLICIES`` equals the engine's ``POLICIES``
+  registry, and the hypothesis-free fallback sweep still exercises every
+  policy;
+* warm re-solve bitwise equals cold per policy (the repair path is
+  policy-agnostic: it only manufactures pending state);
+* the provable telemetry bounds: any ρ's round count is bounded by
+  ρ=1's (each round consumes at least the pending-minimum distance
+  class), and radius-stepping's outer rounds are bounded by the Δ=1
+  bucket count (same argument — Δ=1 outer = distinct finite distances);
+* deterministic edge cases per policy (self-loop, zero weight,
+  disconnected vertex);
+* overflow demotion through the façade's single fallback point;
+* config/plan validation, radius preprocessing and its RadiiStore.
+"""
+import numpy as np
+import pytest
+
+import _property_driver
+from _property_driver import ALL_POLICIES, null_ctx
+from test_differential import adversarial_coo
+from repro.api import Engine, PointToPoint, SingleSource, UpdateBatch
+from repro.compat import enable_x64
+from repro.core import DeltaConfig, dijkstra
+from repro.core.policies import (
+    POLICIES,
+    RadiiStore,
+    compute_radii,
+    default_rho,
+    make_policy,
+)
+from repro.dynamic import apply_weight_update
+from repro.graphs import watts_strogatz
+from repro.graphs.structures import COOGraph, INF32
+
+_INF = int(INF32)
+
+
+def _cfg(policy, *, strategy="edge", pred_mode="argmin", delta=10, **kw):
+    return DeltaConfig(delta=delta, strategy=strategy, pred_mode=pred_mode,
+                       policy=policy, **kw)
+
+
+def _solve(g, source, cfg):
+    return Engine(g, cfg).plan().solve(SingleSource(source))
+
+
+# ---------------------------------------------------------------------------
+# registry + driver-fallback coverage
+# ---------------------------------------------------------------------------
+
+def test_driver_tuple_pins_policy_registry():
+    """A policy added to the engine must join the differential cross
+    product: the test driver's tuple and the core registry are the same
+    set (and 'delta' stays first — the suites slice it off as the
+    already-covered classic loop)."""
+    assert set(ALL_POLICIES) == set(POLICIES)
+    assert ALL_POLICIES[0] == "delta" == POLICIES[0]
+
+
+def test_seed_sweep_fallback_covers_every_policy(monkeypatch):
+    """Without hypothesis the driver degrades to a deterministic seed
+    sweep — the policy loop lives *inside* the test body, so the
+    fallback must still exercise every policy, not silently skip the
+    axis."""
+    monkeypatch.setattr(_property_driver, "HAVE_HYPOTHESIS", False)
+    seen = []
+
+    @_property_driver.drive(
+        max_examples=5, fallback_examples=3,
+        strategy=lambda st: st.integers(min_value=0, max_value=10),
+        fallback_draw=lambda rng: int(rng.integers(0, 10)))
+    def probe(seed):
+        for policy in ALL_POLICIES:
+            seen.append((seed, policy))
+
+    probe()
+    assert len(seen) == 3 * len(ALL_POLICIES)
+    assert {p for _, p in seen} == set(ALL_POLICIES)
+
+
+# ---------------------------------------------------------------------------
+# warm == cold per policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+@pytest.mark.parametrize("pred_mode", ["argmin", "packed"])
+def test_warm_resolve_bitwise_equals_cold(policy, pred_mode):
+    """One perturbation batch per policy: the warm re-solve is bitwise
+    equal (dist AND pred, packed words included) to a cold solve of the
+    updated graph — the repair path only manufactures pending state,
+    and pending is what every policy selects from."""
+    g = watts_strogatz(200, 6, 0.05, seed=3)
+    rng = np.random.default_rng(7)
+    ctx = enable_x64() if pred_mode == "packed" else null_ctx()
+    with ctx:
+        cfg = _cfg(policy, pred_mode=pred_mode, rho=16)
+        plan = Engine(g, cfg).plan()
+        plan.solve(SingleSource(0))
+        w = np.asarray(plan.graph.w)
+        ids = rng.choice(g.n_edges, size=10, replace=False)
+        neww = np.clip(w[ids] + rng.integers(-5, 6, size=10), 1, None)
+        warm = plan.solve(UpdateBatch(ids, neww))
+        assert bool(warm.telemetry.warm)
+        g2 = apply_weight_update(g, ids, neww)
+        cold = Engine(g2, cfg).plan().solve(SingleSource(0))
+        np.testing.assert_array_equal(np.asarray(warm.dist),
+                                      np.asarray(cold.dist))
+        np.testing.assert_array_equal(np.asarray(warm.pred),
+                                      np.asarray(cold.pred))
+
+
+# ---------------------------------------------------------------------------
+# telemetry: the provable round-count bounds
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [2, 3, 12, 13])
+def test_rho_round_count_bounded_by_rho1(seed):
+    """ρ-round-count sanity on the adversarial corpus: every round
+    consumes at least the whole pending-minimum distance class, so
+    rounds(ρ=1) is at least the number of distinct finite distance
+    classes and at most |V| — and larger batches never take more rounds
+    than ρ=1 (each ρ=k round steps a superset of the ρ=1 round's
+    frontier from the same pending state)."""
+    g, source, _ = adversarial_coo(seed)
+
+    def rounds(rho):
+        cfg = _cfg("rho", pred_mode="none", rho=rho)
+        return int(_solve(g, source, cfg).telemetry.buckets)
+
+    base = rounds(1)
+    dref, _ = dijkstra(g, source)
+    finite = dref[dref < _INF]
+    # a round's relaxations can land new members into the class it just
+    # stepped, so base can exceed the class count — never undershoot it
+    assert len(np.unique(finite)) <= base <= g.n_nodes
+    for rho in (4, 32, g.n_nodes):
+        assert rounds(rho) <= base, rho
+
+
+@pytest.mark.parametrize("seed", [2, 3, 12, 13])
+def test_radius_outer_rounds_bounded_by_delta1_buckets(seed):
+    """Radius-stepping's outer rounds are bounded by the Δ=1 bucket
+    count on the adversarial corpus: θ = min pending (tent + r) >= the
+    pending minimum, so each radius round settles at least the distance
+    class a Δ=1 bucket would."""
+    g, source, _ = adversarial_coo(seed)
+    delta1 = _solve(g, source, _cfg("delta", pred_mode="none", delta=1))
+    radius = _solve(g, source, _cfg("radius", pred_mode="none"))
+    assert (int(radius.telemetry.buckets)
+            <= int(delta1.telemetry.buckets))
+    np.testing.assert_array_equal(np.asarray(radius.dist),
+                                  np.asarray(delta1.dist))
+
+
+# ---------------------------------------------------------------------------
+# deterministic edge cases per policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ALL_POLICIES)
+def test_self_loop_zero_weight_and_disconnected(policy):
+    """Hand-built pathology: a self-loop on the source, a zero-weight
+    edge in the shortest path, a duplicate edge pair, and a vertex no
+    edge reaches. Every policy returns the oracle distances and the
+    sentinels (INF32 dist, -1 pred) for the unreachable tail."""
+    src = np.array([0, 0, 0, 1, 1, 2], np.int32)
+    dst = np.array([0, 1, 1, 2, 2, 3], np.int32)
+    w = np.array([5, 3, 7, 0, 4, 2], np.int32)   # dup 0->1, zero 1->2
+    g = COOGraph(src, dst, w, 5)                 # vertex 4 disconnected
+    cfg = _cfg(policy, delta=3, rho=2)
+    res = _solve(g, 0, cfg)
+    dist = np.asarray(res.dist, np.int64)
+    dref, _ = dijkstra(g, 0)
+    np.testing.assert_array_equal(dist, dref)
+    assert dist[4] == _INF
+    assert int(np.asarray(res.pred)[4]) == -1
+    assert dist.tolist() == [0, 3, 3, 5, _INF]
+
+
+# ---------------------------------------------------------------------------
+# overflow demotion through the façade's fallback point
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ALL_POLICIES[1:])
+def test_overflow_demotes_to_full_width_per_policy(policy):
+    """A frontier cap the policy's rounds overflow must demote through
+    ``Plan.solve(fallback=True)`` to the full-width twin — same policy,
+    exact answers, fallback telemetry set."""
+    g = watts_strogatz(200, 8, 0.05, seed=25)
+    cfg = _cfg(policy, strategy="ell", frontier_cap=4, rho=64)
+    plan = Engine(g, cfg).plan(fallback=True)
+    res = plan.solve(SingleSource(0))
+    assert plan._demoted is not None
+    assert bool(res.telemetry.fallback)
+    assert plan._demoted.config.policy == policy
+    dref, _ = dijkstra(g, 0)
+    np.testing.assert_array_equal(np.asarray(res.dist, np.int64), dref)
+    # follow-up queries ride the demoted twin and stay exact
+    p2p = plan.solve(PointToPoint(0, 7))
+    assert p2p.distance == int(dref[7])
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="policy"):
+        DeltaConfig(policy="bogus")
+    with pytest.raises(ValueError):
+        DeltaConfig(policy="rho", rho=0)
+    with pytest.raises(ValueError):
+        DeltaConfig(policy="radius", radius_k=0)
+
+
+def test_grid_stencil_rejects_non_delta_policies():
+    """The grid kernel recomputes bucket membership in-kernel from
+    tent // Δ — it has no frontier-mask input a policy could drive."""
+    from repro.graphs import grid_map
+    g, free = grid_map(8, 8, seed=0)
+    cfg = DeltaConfig(delta=13, strategy="pallas", interpret=True,
+                      pred_mode="none", policy="rho", rho=8)
+    with pytest.raises(ValueError, match="policy"):
+        Engine(g, cfg, free_mask=free).plan()
+
+
+def test_landmark_p2p_rejects_non_delta_policies():
+    g = watts_strogatz(100, 4, 0.05, seed=1)
+    plan = Engine(g, _cfg("rho", rho=8)).plan()
+    with pytest.raises(ValueError, match="delta"):
+        plan.solve(PointToPoint(0, 5, mode="alt"))
+
+
+def test_explain_reports_policy():
+    g = watts_strogatz(100, 4, 0.05, seed=1)
+    assert Engine(g, _cfg("radius")).plan().explain()["policy"] == "radius"
+
+
+# ---------------------------------------------------------------------------
+# radius preprocessing + store
+# ---------------------------------------------------------------------------
+
+def test_compute_radii_kth_smallest_out_weight():
+    src = np.array([0, 0, 0, 1, 2], np.int32)
+    dst = np.array([1, 2, 3, 0, 0], np.int32)
+    w = np.array([9, 4, 6, 5, 8], np.int32)
+    g = COOGraph(src, dst, w, 4)                 # vertex 3: no out-edges
+    r = compute_radii(g, k=2)
+    assert r.tolist() == [6, 5, 8, 0]            # deg<k -> max out weight
+    assert compute_radii(g, k=1).tolist() == [4, 5, 8, 0]
+    assert compute_radii(g, k=10).tolist() == [9, 5, 8, 0]
+    with pytest.raises(ValueError):
+        compute_radii(g, k=0)
+
+
+def test_radii_store_round_trip_and_corrupt_miss(tmp_path):
+    g = watts_strogatz(60, 4, 0.05, seed=2)
+    store = RadiiStore(str(tmp_path / "radii"))
+    assert store.get(g, 4) is None               # cold miss
+    r = compute_radii(g, 4)
+    store.put(g, 4, r)
+    np.testing.assert_array_equal(store.get(g, 4), r)
+    # a fresh store object reads the persisted file back
+    fresh = RadiiStore(str(tmp_path / "radii"))
+    np.testing.assert_array_equal(fresh.get(g, 4), r)
+    assert fresh.get(g, 5) is None               # different k: miss
+    # different weights: different content hash, miss
+    g2 = apply_weight_update(g, [0], [int(np.asarray(g.w)[0]) + 1])
+    assert fresh.get(g2, 4) is None
+    # corrupt every stored file: miss, never an error
+    for f in (tmp_path / "radii").iterdir():
+        f.write_bytes(b"garbage")
+    assert RadiiStore(str(tmp_path / "radii")).get(g, 4) is None
+    # in-memory store round-trips without a path
+    mem = RadiiStore(None)
+    mem.put(g, 4, r)
+    np.testing.assert_array_equal(mem.get(g, 4), r)
+
+
+def test_make_policy_defaults():
+    g = watts_strogatz(400, 4, 0.05, seed=2)
+    pol = make_policy(g, DeltaConfig(policy="rho"))
+    assert pol.rho == default_rho(400) == 50
+    pol = make_policy(g, DeltaConfig(policy="rho", rho=7))
+    assert pol.rho == 7
+    rad = make_policy(g, DeltaConfig(policy="radius", radius_k=2))
+    np.testing.assert_array_equal(np.asarray(rad.r), compute_radii(g, 2))

@@ -90,7 +90,7 @@ def test_tuner_can_pick_sharded_winner():
     import jax
     g = watts_strogatz(200, 6, 0.05, seed=0)
 
-    def fake_measure(delta, strat, cap, reps):
+    def fake_measure(delta, strat, cap, policy, reps):
         return 1.0e-6 if strat == "sharded_edge" else 1.0e-3
 
     rec = tune(g, deltas=(5, 10),
@@ -134,7 +134,8 @@ def _record(fp="v1:n=10:m=20:deg=1:w=1-5"):
     return TuningRecord(
         fingerprint=fp, delta=7, strategy="ell", frontier_cap=128,
         source="measured", us_per_solve=123.4,
-        trials=((7, "ell", 128, 123.4), (3, "edge", -1, 456.7)))
+        trials=((7, "ell", 128, "delta", 123.4),
+                (3, "edge", -1, "rho", 456.7)))
 
 
 def test_cache_round_trips_through_json(tmp_path):
@@ -184,6 +185,79 @@ def test_record_json_round_trip():
     assert TuningRecord.from_json(rec.to_json()) == rec
     none_cap = dataclasses.replace(rec, frontier_cap=None, trials=())
     assert TuningRecord.from_json(none_cap.to_json()) == none_cap
+    # the algorithm axis survives the trip
+    rho_rec = dataclasses.replace(rec, policy="rho")
+    assert TuningRecord.from_json(rho_rec.to_json()).policy == "rho"
+
+
+def test_record_json_tolerates_pre_policy_records():
+    """Cache files written before the algorithm axis existed carry no
+    ``policy`` key and 4-element trial rows. They must deserialize as
+    Δ-stepping records — the only policy they could have measured —
+    not crash every cache load."""
+    d = _record().to_json()
+    del d["policy"]
+    d["trials"] = [[7, "ell", 128, 123.4]]      # legacy row shape
+    rec = TuningRecord.from_json(d)
+    assert rec.policy == "delta"
+    assert rec.trials == ((7, "ell", 128, "delta", 123.4),)
+    assert rec.to_config(DeltaConfig()).policy == "delta"
+
+
+def test_stale_fingerprint_version_triggers_fresh_tune(tmp_path):
+    """A record keyed under an older fingerprint version (pre-policy
+    search space) must silently miss — resolve gives a fresh answer, it
+    does not crash and it does not serve the stale winner."""
+    g = watts_strogatz(200, 6, 0.05, seed=0)
+    fp = fingerprint(graph_stats(g))
+    assert fp.startswith("v5:")
+    stale_fp = "v4:" + fp.split(":", 1)[1]
+    path = str(tmp_path / "c.json")
+    cache = TuningCache(path)
+    cache.put(TuningRecord(
+        fingerprint=stale_fp, delta=999, strategy="ell",
+        frontier_cap=None, source="measured"))
+    cache.save()
+    cfg = resolve_config(g, cache_path=path)     # no measurement
+    assert cfg.delta != 999                      # stale winner not served
+    assert cfg.delta == estimate_delta(graph_stats(g))
+
+    calls = []
+
+    def fake_measure(delta, strat, cap, policy, reps):
+        calls.append(delta)
+        return 1.0e-3 * delta
+
+    rec = tune(g, deltas=(2, 5), strategies=("edge",),
+               cache=TuningCache(path), measure_fn=fake_measure)
+    assert calls                                 # fresh search ran
+    assert rec.source == "measured"
+    assert rec.fingerprint == fp
+
+
+def test_tuner_can_pick_policy_winner(tmp_path):
+    """Planted winner on the algorithm axis: the halving loop returns a
+    non-delta policy, the record round-trips through the cache file, and
+    to_config carries the policy into the engine."""
+    g = watts_strogatz(200, 6, 0.05, seed=0)
+
+    def fake_measure(delta, strat, cap, policy, reps):
+        if (strat, policy) == ("ell", "rho"):
+            return 1.0e-6                       # planted winner
+        return 1.0e-3
+
+    path = str(tmp_path / "c.json")
+    rec = tune(g, deltas=(5, 10), strategies=("edge", "ell"),
+               cache=TuningCache(path), measure_fn=fake_measure)
+    assert (rec.strategy, rec.policy) == ("ell", "rho")
+    assert any(t[3] == "rho" for t in rec.trials)
+    reloaded = TuningCache(path).get(rec.fingerprint)
+    assert reloaded.policy == "rho"
+    cfg = reloaded.to_config(DeltaConfig())
+    assert cfg.policy == "rho"
+    res = DeltaSteppingSolver(g, cfg).solve(0)
+    dref, _ = dijkstra(g, 0)
+    np.testing.assert_array_equal(np.asarray(res.dist, np.int64), dref)
 
 
 # ---------------------------------------------------------------------------
@@ -193,31 +267,37 @@ def test_record_json_round_trip():
 def test_candidate_grid_shape():
     stats = graph_stats(watts_strogatz(200, 6, 0.05, seed=0))
     cands = candidate_configs(stats)
-    deltas = {d for d, _, _ in cands}
+    deltas = {d for d, _, _, _ in cands}
     assert len(deltas) >= 3                      # geometric grid around est
     assert estimate_delta(stats) in deltas
     assert all(d >= 1 for d in deltas)
     # edge ignores packing; ell gets one candidate per cap fraction
-    assert sum(1 for _, s, c in cands if s == "edge" and c is not None) == 0
-    assert any(s == "ell" and c is not None for _, s, c in cands)
+    assert sum(1 for _, s, c, _ in cands
+               if s == "edge" and c is not None) == 0
+    assert any(s == "ell" and c is not None for _, s, c, _ in cands)
+    # the algorithm axis rides along: every policy appears, and the
+    # non-bucketing policies enter at a single central Δ (no Δ sweep)
+    assert {p for _, _, _, p in cands} == {"delta", "rho", "radius"}
+    assert len({d for d, _, _, p in cands if p == "rho"}) == 1
 
 
 def test_successive_halving_picks_known_winner():
     g = watts_strogatz(200, 6, 0.05, seed=0)
     calls = []
 
-    def fake_measure(delta, strat, cap, reps):
-        calls.append((delta, strat, cap, reps))
-        if (delta, strat) == (5, "ell"):
+    def fake_measure(delta, strat, cap, policy, reps):
+        calls.append((delta, strat, cap, policy, reps))
+        if (delta, strat, policy) == (5, "ell", "delta"):
             return 1.0e-6                       # planted winner
         return 1.0e-3 * delta
 
     rec = tune(g, deltas=(2, 5, 11, 23), measure_fn=fake_measure)
     assert (rec.delta, rec.strategy) == (5, "ell")
+    assert rec.policy == "delta"
     assert rec.source == "measured"
     assert rec.us_per_solve == pytest.approx(1.0, rel=0.5)
     # halving: later rounds re-measure fewer candidates at higher reps
-    assert max(reps for _, _, _, reps in calls) > 1
+    assert max(reps for *_, reps in calls) > 1
     assert rec.trials                            # evidence trail kept
 
 
@@ -225,7 +305,7 @@ def test_tuner_rejects_overflowing_candidates():
     """A frontier cap the graph overflows must never be returned."""
     g = watts_strogatz(200, 6, 0.05, seed=0)
 
-    def fake_measure(delta, strat, cap, reps):
+    def fake_measure(delta, strat, cap, policy, reps):
         if cap is not None:
             return float("inf") if cap < 200 else 2.0e-3
         return 1.0e-3 * delta
@@ -239,7 +319,7 @@ def test_tune_cache_hit_skips_search(tmp_path):
     cache = TuningCache(str(tmp_path / "c.json"))
     calls = []
 
-    def fake_measure(delta, strat, cap, reps):
+    def fake_measure(delta, strat, cap, policy, reps):
         calls.append(delta)
         return 1.0e-3 * delta
 
